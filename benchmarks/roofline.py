@@ -1,0 +1,216 @@
+import os as _os
+import sys as _sys
+
+if __name__ == "__main__" and "--table" not in _sys.argv:
+    # probe compiles target the production mesh; set before any jax import
+    _os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis from the compiled dry-run artifacts.
+
+Two inputs per (arch x shape) cell:
+  1. the full-size dry-run JSON (experiments/dryrun/*.json) — proves the
+     cell compiles and fits, and gives the HLO structure;
+  2. probe extrapolation — XLA's cost_analysis counts a while-loop body
+     ONCE regardless of trip count (verified in EXPERIMENTS.md §Dry-run),
+     so per-cell totals are recovered by compiling the SAME cell at two
+     reduced depths L1 < L2 (scan bodies unchanged), fitting
+     cost(L) = a + b*L, and extrapolating to the real depth.  Microbatch
+     scans don't change true totals (same tokens), so probes run mb=1.
+
+Terms (per chip, per step), v5e-class constants:
+  compute_s    = HLO_FLOPs / 197e12
+  memory_s     = HLO_bytes / 819e9
+  collective_s = collective_bytes / 50e9
+plus MODEL_FLOPS = 6*N*D (active N for MoE) and the useful-compute ratio.
+
+Usage: python -m benchmarks.roofline --arch gemma2-9b --shape train_4k
+       python -m benchmarks.roofline --table   (render EXPERIMENTS table)
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+PROBE_DIR = pathlib.Path("experiments/roofline")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def probe_depths(cfg):
+    """Two valid reduced depths for linear fitting, respecting each
+    family's repeating unit."""
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_attn_period
+        return p, 2 * p
+    if cfg.local_global_period:
+        return 2, 4
+    if cfg.moe is not None:
+        nd = cfg.moe.first_dense_layers
+        return nd + 2, nd + 4
+    return 2, 4
+
+
+def compile_probe(arch: str, shape: str, n_layers: int, comm: str,
+                  tuning: dict | None = None, overrides: dict | None = None):
+    import dataclasses as dc
+    import jax
+    from repro.configs import get_config
+    from repro.launch import build
+    from repro.launch.dryrun import _collective_bytes
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.config import SHAPES, input_specs
+
+    # depth-reduced probe with every scan unrolled (while bodies are
+    # cost-counted once); MTP (depth-constant) lands in the fit intercept
+    cfg = dc.replace(get_config(arch), n_layers=n_layers, microbatches=1,
+                     probe_unroll=True, **(overrides or {}))
+    mesh = make_production_mesh()
+    kind = SHAPES[shape]["kind"]
+    with jax.set_mesh(mesh):
+        specs_in = input_specs(cfg, shape)
+        if kind == "train":
+            wrap, (ps, psp), (os_, osp), _ = build.make_train_step(
+                cfg, mesh, comm, **(tuning or {}))
+            lowered = jax.jit(wrap(specs_in), donate_argnums=(0, 1)).lower(
+                build.global_shape(ps, psp, mesh),
+                build.global_shape(os_, osp, mesh), specs_in)
+        elif kind == "prefill":
+            wp, _, _, (ps, psp), _ = build.make_serve_steps(
+                cfg, mesh, shape, comm)
+            lowered = jax.jit(wp(specs_in)).lower(
+                build.global_shape(ps, psp, mesh), specs_in)
+        else:
+            _, wd, (cs, csp), (ps, psp), _ = build.make_serve_steps(
+                cfg, mesh, shape, comm)
+            lowered = jax.jit(wd(specs_in), donate_argnums=(1,)).lower(
+                build.global_shape(ps, psp, mesh),
+                build.global_shape(cs, csp, mesh), specs_in)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = _collective_bytes(compiled.as_text())
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll_bytes": float(sum(coll["bytes"].values())),
+    }
+
+
+def extrapolate(arch: str, shape: str, comm: str = "shmem",
+                use_cache: bool = True, tuning: dict | None = None,
+                overrides: dict | None = None, tag: str = "") -> dict:
+    """Fit cost(L)=a+b*L from two probes; extrapolate to the full depth.
+    `tuning` feeds the step builder (allreduce_algo/grad_rs/...);
+    `overrides` patches the ModelConfig; `tag` namespaces the cache for
+    hillclimb variants."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as dc
+        cfg = dc.replace(cfg, **overrides)
+    key = f"{arch}__{shape}__{comm}" + (f"__{tag}" if tag else "")
+    PROBE_DIR.mkdir(parents=True, exist_ok=True)
+    cache = PROBE_DIR / f"{key}.json"
+    if use_cache and cache.exists():
+        return json.loads(cache.read_text())
+    l1, l2 = probe_depths(cfg)
+    c1 = compile_probe(arch, shape, l1, comm, tuning, overrides)
+    c2 = compile_probe(arch, shape, l2, comm, tuning, overrides)
+    full = {}
+    for k in c1:
+        b = (c2[k] - c1[k]) / (l2 - l1)
+        a = c1[k] - b * l1
+        full[k] = a + b * cfg.n_layers
+    # model flops: 6*N*D for train (fwd+bwd), 2*N*D for inference fwd
+    from repro.models.config import SHAPES
+    s = SHAPES[shape]
+    n_active = cfg.param_count(active_only=cfg.moe is not None)
+    if s["kind"] == "train":
+        tokens = s["seq_len"] * s["global_batch"]
+        model_flops = 6 * n_active * tokens
+    elif s["kind"] == "prefill":
+        tokens = s["seq_len"] * s["global_batch"]
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = 1 * s["global_batch"]
+        model_flops = 2 * n_active * tokens
+    n_chips = 256
+    res = {
+        "cell": key,
+        "probe_depths": [l1, l2],
+        "hlo_flops_per_chip": full["flops"],
+        "hlo_bytes_per_chip": full["bytes"],
+        "coll_bytes_per_chip": full["coll_bytes"],
+        "compute_s": full["flops"] / PEAK_FLOPS,
+        "memory_s": full["bytes"] / HBM_BW,
+        "collective_s": full["coll_bytes"] / ICI_BW,
+        "model_flops_global": model_flops,
+        "model_flops_per_chip": model_flops / n_chips,
+        "useful_ratio": (model_flops / n_chips) / max(full["flops"], 1.0),
+    }
+    terms = {k: res[k] for k in ("compute_s", "memory_s", "collective_s")}
+    res["bottleneck"] = max(terms, key=terms.get)
+    res["step_time_s"] = max(terms.values())
+    res["roofline_fraction"] = (
+        res["model_flops_per_chip"] / PEAK_FLOPS / max(res["step_time_s"],
+                                                       1e-12))
+    cache.write_text(json.dumps(res, indent=2))
+    return res
+
+
+def render_table(out=sys.stdout):
+    rows = []
+    for f in sorted(PROBE_DIR.glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    hdr = (f"{'cell':52s} {'compute_s':>10} {'memory_s':>10} "
+           f"{'coll_s':>10} {'bottleneck':>11} {'useful':>7} {'MFU':>6}")
+    print(hdr, file=out)
+    for r in rows:
+        print(f"{r['cell']:52s} {r['compute_s']:.3e} {r['memory_s']:.3e} "
+              f"{r['collective_s']:.3e} {r['bottleneck'][:-2]:>11} "
+              f"{min(r['useful_ratio'], 9.99):7.3f} "
+              f"{min(r['roofline_fraction'], 9.99):6.3f}", file=out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--comm", default="shmem")
+    ap.add_argument("--table", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args()
+    if args.table:
+        render_table()
+        return
+    if args.all:
+        from repro.configs import ARCHS, get_config
+        from repro.models.config import SHAPES, shape_applicable
+        for a in ARCHS:
+            for s in SHAPES:
+                ok, why = shape_applicable(get_config(a), s)
+                if not ok:
+                    continue
+                try:
+                    r = extrapolate(a, s, args.comm,
+                                    use_cache=not args.no_cache)
+                    print(f"[roofline] {a}__{s}: {r['bottleneck']} "
+                          f"frac={r['roofline_fraction']:.3f}")
+                except Exception as e:  # noqa
+                    print(f"[roofline] {a}__{s}: FAILED {e}")
+        return
+    res = extrapolate(args.arch, args.shape, args.comm,
+                      use_cache=not args.no_cache)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (paper Figs. 3-9 + kernel layer),
+then the roofline table if dry-run/probe artifacts exist.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    from . import paper_benches
+
+    print("name,us_per_call,derived")
+    for bench in paper_benches.ALL:
+        bench()
+
+    print("\n== substrate A/B (ARL shmem vs XLA 'eLib') ==")
+    try:
+        from . import bench_substrate
+        bench_substrate.main()
+    except Exception as e:  # subprocess-heavy; non-fatal
+        print(f"substrate bench skipped: {e}")
+
+    probe_dir = pathlib.Path("experiments/roofline")
+    if probe_dir.exists() and any(probe_dir.glob("*.json")):
+        print("\n== roofline (from dry-run probes) ==")
+        from . import roofline
+        roofline.render_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""The paper's Figs. 3-9 in one script: every collective on the sim
+backend, each against its XLA-analogue reference, with alpha-beta fits
+from modeled NoC stage times.
+
+Run:  PYTHONPATH=src python examples/collectives_showcase.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import sim_ctx, epiphany3, abmodel
+from repro.core import collectives as coll
+
+topo = epiphany3()
+n = topo.n_pes
+ctx = sim_ctx(n, topo)
+link = abmodel.EPIPHANY_NOC
+
+rows = []
+for nbytes in [8 << i for i in range(8)]:
+    stages = {
+        "put": [(float(nbytes), 1.0)],
+        "get(IPI)": [(float(nbytes), 1.0), (8.0, 1.0)],
+        "broadcast": coll.broadcast_stages(n, nbytes, topo),
+        "fcollect": coll.fcollect_stages(n, nbytes, topo),
+        "reduce": coll.allreduce_stages(n, nbytes, topo),
+        "alltoall": coll.alltoall_stages(n, nbytes * n, topo),
+        "barrier": coll.barrier_stages(n, topo),
+    }
+    rows.append((nbytes, {k: abmodel.modeled_collective_time(v, link)
+                          for k, v in stages.items()}))
+
+names = list(rows[0][1])
+print(f"{'bytes':>8} " + " ".join(f"{x:>12}" for x in names))
+for nbytes, r in rows:
+    print(f"{nbytes:8d} " + " ".join(f"{r[k]*1e6:10.2f}us" for k in names))
+
+# alpha-beta fit, like the paper's figure subtitles
+for op in ("put", "broadcast", "reduce"):
+    fit = abmodel.fit([r[0] for r in rows], [r[1][op] for r in rows])
+    print(f"{op}: alpha={fit.alpha*1e6:.3f}us  "
+          f"beta^-1={fit.inv_beta/1e9:.3f} GB/s")

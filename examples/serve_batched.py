@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests: prefill + decode over the
+shmem substrate, greedy sampling through vocab-sharded logits.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch import serve as serve_mod
+
+if __name__ == "__main__":
+    serve_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--batch", "4",
+        "--prompt-len", "16", "--tokens", "16", "--cache-len", "64"])

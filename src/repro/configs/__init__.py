@@ -1,0 +1,6 @@
+"""Assigned-architecture configs (+ the paper's own epiphany16 setup).
+
+Each module exposes CONFIG (full size, dry-run only) and smoke() (reduced
+same-family config that runs a real step on CPU).
+"""
+from .registry import ARCHS, get_config, smoke_config

@@ -1,0 +1,32 @@
+"""deepseek-v3-671b [moe]: 61L d7168 128H MLA, 1 shared + 256 routed
+top-8 experts (ff 2048), first 3 layers dense (ff 18432), MTP head,
+v129280.  EP over the full (data x model) mesh, ZeRO-3 fsdp for the
+dense trunk, int8 optimizer moments. [arXiv:2412.19437; hf]"""
+import jax.numpy as jnp
+
+from ..models.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe", n_layers=61, d_model=7168,
+    n_heads=128, n_kv_heads=128, head_dim=128, d_ff=18432, vocab=129280,
+    attn="mla",
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128,
+                  qk_rope_dim=64, v_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, d_ff=2048, n_shared=1,
+                  first_dense_layers=3, ep_over_data=True),
+    mtp=True, fsdp=True, moment_dtype="int8", microbatches=16,
+    param_dtype=jnp.bfloat16,   # 1.3 TB of experts: bf16 storage, f32
+                                # optimizer math (deepseek itself used fp8)
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="deepseek-smoke", family="moe", n_layers=3, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=160, vocab=128,
+        attn="mla",
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                      qk_rope_dim=8, v_dim=16),
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=32, n_shared=1,
+                      first_dense_layers=1),
+        mtp=True, remat="none", microbatches=1)

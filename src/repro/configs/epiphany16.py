@@ -1,0 +1,23 @@
+"""The paper's own platform: 16 PEs on a 4x4 eMesh (Epiphany-III inside
+the $99 Parallella).  Used by the paper-scale benchmark suite
+(benchmarks/) and the alpha-beta model constants."""
+from ..core.topology import epiphany3
+from ..core import abmodel
+
+TOPOLOGY = epiphany3()
+N_PES = TOPOLOGY.n_pes          # 16
+CLOCK_HZ = 600e6
+PUT_LINK = abmodel.EPIPHANY_NOC
+GET_LINK = abmodel.EPIPHANY_NOC_GET
+# message sizes swept in the paper's figures (bytes)
+MSG_SIZES = [8 << i for i in range(12)]   # 8 B .. 16 KB
+# paper-reported reference numbers (for EXPERIMENTS.md comparisons)
+PAPER = {
+    "put_peak_GBs": 2.4,          # Fig. 3 / text
+    "get_put_ratio": 0.1,         # get ~10x slower
+    "elib_barrier_us": 2.0,
+    "wand_barrier_us": 0.1,
+    "dissem_barrier_us_16pe": 0.23,
+    "bcast_GBs_over_log2N": 2.4,  # ~2.4/log2(N) GB/s
+    "ipi_get_turnover_B": 64,
+}

@@ -1,0 +1,19 @@
+"""gemma2-9b [dense]: 42L d3584 16H GQA(kv=8) hd256 ff14336 v256000,
+alternating local(4k SWA)/global attention, logit softcaps.
+[arXiv:2408.00118; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-9b", family="dense", n_layers=42, d_model=3584,
+    n_heads=16, n_kv_heads=8, head_dim=256, d_ff=14336, vocab=256000,
+    local_global_period=2, local_window=4096, softcap=50.0,
+    final_softcap=30.0, microbatches=16, moment_dtype="bf16",
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="gemma2-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=256,
+        local_global_period=2, local_window=16, softcap=50.0,
+        final_softcap=30.0, remat="none", microbatches=1)

@@ -1,0 +1,17 @@
+"""granite-moe-3b-a800m [moe]: 32L d1536 24H GQA(kv=8) 40 experts top-8
+(expert ff 512), v49155. [hf:ibm-granite]"""
+from ..models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe", n_layers=32, d_model=1536,
+    n_heads=24, n_kv_heads=8, head_dim=64, d_ff=512, vocab=49155,
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512), microbatches=2,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="granite-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=64, vocab=128,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff=64),
+        remat="none", microbatches=1)

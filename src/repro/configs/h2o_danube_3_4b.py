@@ -1,0 +1,16 @@
+"""h2o-danube-3-4b [dense]: 24L d3840 32H GQA(kv=8) ff10240 v32000,
+llama+mistral mix with sliding-window attention. [arXiv:2401.16818]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense", n_layers=24, d_model=3840,
+    n_heads=32, n_kv_heads=8, head_dim=120, d_ff=10240, vocab=32000,
+    window=4096, microbatches=8,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="danube-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=128,
+        window=16, remat="none", microbatches=1)

@@ -1,0 +1,19 @@
+"""internlm2-20b [dense]: 48L d6144 48H GQA(kv=8) ff16384 v92544.
+[arXiv:2403.17297; hf]"""
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b", family="dense", n_layers=48, d_model=6144,
+    n_heads=48, n_kv_heads=8, head_dim=128, d_ff=16384, vocab=92544,
+    rope_theta=1e6, microbatches=16, moment_dtype="int8",
+    param_dtype=jnp.bfloat16,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="internlm2-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=128,
+        rope_theta=1e6, remat="none", microbatches=1)

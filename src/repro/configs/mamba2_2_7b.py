@@ -1,0 +1,20 @@
+"""mamba2-2.7b [ssm]: 64L d2560, attention-free SSD (state 128,
+head_dim 64), v50280. [arXiv:2405.21060]"""
+from ..models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b", family="ssm", n_layers=64, d_model=2560,
+    n_heads=0, n_kv_heads=0, head_dim=None, d_ff=0, vocab=50280,
+    attn="none",
+    ssm=SSMConfig(state=128, head_dim=64, n_groups=1, expand=2),
+    microbatches=8,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm", n_layers=3, d_model=64,
+        n_heads=0, n_kv_heads=0, head_dim=None, d_ff=0, vocab=128,
+        attn="none",
+        ssm=SSMConfig(state=8, head_dim=8, n_groups=1, expand=2, chunk=8),
+        remat="none", microbatches=1)

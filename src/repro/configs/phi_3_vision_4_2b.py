@@ -1,0 +1,19 @@
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone 32L d3072 32H ff8192
+v32064 + CLIP frontend (STUB: input_specs provides precomputed patch
+embeddings scattered over the first 576 positions).
+[hf:microsoft/Phi-3-vision-128k-instruct]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm", n_layers=32, d_model=3072,
+    n_heads=32, n_kv_heads=32, head_dim=96, d_ff=8192, vocab=32064,
+    frontend="vision", n_frontend_tokens=576, microbatches=8,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="phi3v-smoke", family="vlm", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=128,
+        frontend="vision", n_frontend_tokens=8, remat="none",
+        microbatches=1)

@@ -1,0 +1,16 @@
+"""qwen2-0.5b [dense]: 24L d896 14H GQA(kv=2) ff4864 v151936, QKV bias,
+tied embeddings. [arXiv:2407.10671; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b", family="dense", n_layers=24, d_model=896,
+    n_heads=14, n_kv_heads=2, head_dim=64, d_ff=4864, vocab=151936,
+    qkv_bias=True, tie_embeddings=True, rope_theta=1e6, microbatches=4,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="qwen2-smoke", family="dense", n_layers=2, d_model=48,
+        n_heads=3, n_kv_heads=1, head_dim=16, d_ff=96, vocab=128,
+        qkv_bias=True, tie_embeddings=True, remat="none", microbatches=1)

@@ -1,0 +1,20 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 layers (d2048, state 64) with a shared
+attention(32H)+MLP block applied every 6 layers, v32000.
+[arXiv:2411.15242; hf]"""
+from ..models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, n_kv_heads=32, head_dim=64, d_ff=8192, vocab=32000,
+    ssm=SSMConfig(state=64, head_dim=64, n_groups=1, expand=2),
+    hybrid_attn_period=6, microbatches=8,
+)
+
+
+def smoke():
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid", n_layers=4, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab=128,
+        ssm=SSMConfig(state=8, head_dim=8, n_groups=1, expand=2, chunk=8,
+                      conv_width=4),
+        hybrid_attn_period=2, remat="none", microbatches=1)

@@ -1,0 +1,11 @@
+"""ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
+from . import abmodel, collectives, heap, netops, shmem, topology
+from .netops import NetOps, SimNetOps, SpmdNetOps
+from .shmem import ShmemContext, sim_ctx, spmd_ctx
+from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
+
+__all__ = [
+    "abmodel", "collectives", "heap", "netops", "shmem", "topology",
+    "NetOps", "SimNetOps", "SpmdNetOps", "ShmemContext", "sim_ctx",
+    "spmd_ctx", "MeshTopology", "epiphany3", "v5e_multipod", "v5e_pod",
+]

@@ -1,0 +1,490 @@
+"""The paper's collective algorithms (§3.6), written once over NetOps.
+
+Algorithm choices mirror the paper exactly:
+
+  * barrier        — dissemination (ceil(log2 N) rounds, 8*log2(N) bytes of
+                     sync state); the 'WAND hardware barrier' analogue is a
+                     zero-byte psum left to XLA (shmem.py).
+  * broadcast      — binomial tree, *farthest-first*: largest stride first
+                     so later stages do not add network congestion.
+  * fcollect       — recursive doubling for powers of two, ring otherwise.
+  * collect        — ring (the paper's linear-scaling variant).
+  * reductions     — dissemination/recursive-doubling for powers of two,
+                     ring (reduce-scatter + allgather) otherwise.
+  * alltoall       — pairwise exchange, one ring offset per stage.
+
+Every routine also has a ``*_stages`` descriptor used by the alpha-beta
+cost model (benchmarks' `derived` column and the roofline cross-check).
+
+All functions take the PE-local array (under SPMD) or the PE-stacked array
+(under SIM) — `_lmap` hides the difference for shape-changing local ops.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .netops import NetOps, SimNetOps
+
+
+def _lmap(net: NetOps, f: Callable, *xs):
+    """Apply a PE-local function under either backend."""
+    if isinstance(net, SimNetOps):
+        return jax.vmap(f)(*xs)
+    return f(*xs)
+
+
+def _ceil_log2(n: int) -> int:
+    return max(1, n - 1).bit_length() if n > 1 else 0
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def _bcast_pe(net: NetOps, shape) -> jnp.ndarray:
+    """my_pe broadcast to pair with local arrays in _lmap."""
+    return net.my_pe()
+
+
+# ---------------------------------------------------------------------------
+# barrier
+# ---------------------------------------------------------------------------
+
+def barrier(net: NetOps, token=None):
+    """Dissemination barrier: round k exchanges a token with PE (i + 2^k).
+
+    Returns a scalar token; thread it into downstream computation to order
+    operations (the SPMD analogue of 'all cores reached this line')."""
+    n = net.n_pes
+    tok = jnp.zeros((), jnp.int32) if token is None else token
+    if isinstance(net, SimNetOps):
+        tok = jnp.broadcast_to(tok, (n,) + tok.shape[1:]) if tok.ndim == 0 else tok
+    for k in range(_ceil_log2(n)):
+        stride = 1 << k
+        perm = [(i, (i + stride) % n) for i in range(n)]
+        tok = tok + net.ppermute(tok, perm)
+    return tok
+
+
+def barrier_stages(n: int, topo=None) -> list[tuple[float, float]]:
+    """[(bytes, hops)] per stage for the cost model (8 bytes of sync state
+    per round, as in the paper's 8*log2(N) sync array)."""
+    out = []
+    for k in range(_ceil_log2(n)):
+        stride = 1 << k
+        hops = _stride_hops(stride, n, topo)
+        out.append((8.0, hops))
+    return out
+
+
+def _stride_hops(stride: int, n: int, topo) -> float:
+    if topo is None:
+        return 1.0
+    return topo.hops(0, stride % n)
+
+
+# ---------------------------------------------------------------------------
+# broadcast (farthest-first binomial tree)
+# ---------------------------------------------------------------------------
+
+def broadcast(net: NetOps, x, root: int = 0):
+    n = net.n_pes
+    if n == 1:
+        return x
+    p2 = 1 << _ceil_log2(n)
+    buf = x
+    # farthest-first: stride p2/2 down to 1 (paper: move the data the
+    # farthest distance first).
+    stride = p2 >> 1
+    while stride >= 1:
+        perm = []
+        dst_mask = np.zeros((n,), dtype=bool)
+        for rel in range(0, n, 2 * stride):
+            src = (rel + root) % n
+            rel_dst = rel + stride
+            if rel_dst < n:
+                dst = (rel_dst + root) % n
+                perm.append((src, dst))
+                dst_mask[dst] = True
+        recv = net.ppermute(buf, perm)
+        buf = net.select(dst_mask, recv, buf)
+        stride >>= 1
+    return buf
+
+
+def broadcast_stages(n: int, nbytes: float, topo=None):
+    out = []
+    p2 = 1 << _ceil_log2(n)
+    stride = p2 >> 1
+    while stride >= 1:
+        out.append((float(nbytes), _stride_hops(stride, n, topo)))
+        stride >>= 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fcollect / collect (allgather)
+# ---------------------------------------------------------------------------
+
+def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None):
+    """Concatenate equal-size blocks from all PEs along `axis`.
+
+    Recursive doubling (log2 N stages, doubling message size) when N is a
+    power of two, ring otherwise — the paper's fcollect/collect split."""
+    n = net.n_pes
+    if n == 1:
+        return x
+    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    if algo == "rd":
+        return _fcollect_rd(net, x, axis)
+    return _collect_ring(net, x, axis)
+
+
+def collect(net: NetOps, x, axis: int = 0):
+    """The paper's linear-scaling ring collect."""
+    return _collect_ring(net, x, axis)
+
+
+def _out_zeros_like(x, axis, n, pe_leading):
+    shp = list(x.shape)
+    ax = axis + (1 if pe_leading else 0)
+    shp[ax] = shp[ax] * n
+    return jnp.zeros(shp, x.dtype)
+
+
+def _fcollect_rd(net: NetOps, x, axis: int):
+    n = net.n_pes
+    blk = x.shape[axis + (1 if isinstance(net, SimNetOps) else 0)]
+    buf = _out_zeros_like(x, axis, n, isinstance(net, SimNetOps))
+    pe = net.my_pe()
+
+    def place(b, v, i):
+        starts = [0] * b.ndim
+        starts[axis] = i * blk
+        return lax.dynamic_update_slice(b, v, tuple(starts))
+
+    buf = _lmap(net, place, buf, x, pe)
+    for k in range(_ceil_log2(n)):
+        stride = 1 << k
+        perm = [(i, i ^ stride) for i in range(n)]
+        recv = net.ppermute(buf, perm)
+        buf = buf + recv  # disjoint filled regions, zeros elsewhere
+    return buf
+
+
+# Ring collectives use a STATIC schedule: every PE-dependent block index
+# is hoisted into one pre- or post-rotation (a single gather), so loop
+# bodies contain no dynamic_update_slice at all.  This mirrors how the
+# paper's PEs precompute their schedule in shmem_init, and it is what
+# keeps per-stage HBM traffic at one block instead of one full buffer
+# (EXPERIMENTS.md §Perf P1).  Set "dus" to get the naive baseline back.
+RING_SCHEDULE = "static"
+
+
+def _take_blocks(net: NetOps, x, idx, nblk: int, axis: int):
+    """out block t = x block idx[t] (idx traced per PE), one gather."""
+    def one(v, ix):
+        shp = v.shape
+        vb = v.reshape(shp[:axis] + (nblk, shp[axis] // nblk)
+                       + shp[axis + 1:])
+        taken = jnp.take(vb, ix, axis=axis)
+        return taken.reshape(shp)
+    return _lmap(net, one, x, idx)
+
+
+def _collect_ring(net: NetOps, x, axis: int):
+    n = net.n_pes
+    if RING_SCHEDULE == "dus":
+        return _collect_ring_dus(net, x, axis)
+    pe = net.my_pe()
+    ring = [(i, (i + 1) % n) for i in range(n)]
+    parts = [x]
+    cur = x
+    for j in range(1, n):
+        cur = net.ppermute(cur, ring)
+        parts.append(cur)                   # part t holds block (pe - t)
+    sim = isinstance(net, SimNetOps)
+    stacked = jnp.concatenate(parts, axis=axis + (1 if sim else 0))
+    # out block i = stacked part (pe - i) mod n
+    idx = (pe[..., None] - jnp.arange(n)) % n if sim \
+        else (pe - jnp.arange(n)) % n
+    return _take_blocks(net, stacked, idx, n, axis)
+
+
+def _collect_ring_dus(net: NetOps, x, axis: int):
+    n = net.n_pes
+    sim = isinstance(net, SimNetOps)
+    blk = x.shape[axis + (1 if sim else 0)]
+    buf = _out_zeros_like(x, axis, n, sim)
+    pe = net.my_pe()
+    ring = [(i, (i + 1) % n) for i in range(n)]
+
+    cur = x
+    for j in range(n):
+        idx_arr = (pe - j) % n
+
+        def place(b, v, i):
+            starts = [0] * b.ndim
+            starts[axis] = i * blk
+            return lax.dynamic_update_slice(b, v, tuple(starts))
+
+        buf = _lmap(net, place, buf, cur, idx_arr)
+        if j < n - 1:
+            cur = net.ppermute(cur, ring)
+    return buf
+
+
+def fcollect_stages(n: int, nbytes: float, topo=None, algorithm=None):
+    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    out = []
+    if algo == "rd":
+        for k in range(_ceil_log2(n)):
+            stride = 1 << k
+            out.append((nbytes * stride, _stride_hops(stride, n, topo)))
+    else:
+        for _ in range(n - 1):
+            out.append((float(nbytes), _stride_hops(1, n, topo)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# reductions
+# ---------------------------------------------------------------------------
+
+OPS: dict[str, Callable] = {
+    "sum": jnp.add,
+    "prod": jnp.multiply,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "and": jnp.bitwise_and,
+    "or": jnp.bitwise_or,
+    "xor": jnp.bitwise_xor,
+}
+
+
+RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: beyond this, bandwidth wins
+
+
+def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
+              algorithm: str | None = None):
+    """shmem_TYPE_OP_to_all.
+
+    Algorithm selection generalizes the paper's PE-count switch (§3.6:
+    dissemination for powers of two, ring otherwise) with its own
+    small-vs-large-message lesson: recursive doubling moves the FULL
+    buffer log2(N) times (alpha-optimal), the ring moves ~2x the buffer
+    total (bandwidth-optimal), so large payloads take the ring even at
+    power-of-two PE counts ("auto").  Explicit "rd"/"ring" override."""
+    n = net.n_pes
+    if n == 1:
+        return x
+    fn = combine or OPS[op]
+    if algorithm in (None, "auto"):
+        leaves = jax.tree.leaves(x)
+        nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
+        if algorithm == "auto" and nbytes >= RING_BYTES_THRESHOLD:
+            algo = "ring"
+        else:
+            algo = "rd" if _is_pow2(n) else "ring"
+    else:
+        algo = algorithm
+    if algo == "rd":
+        for k in range(_ceil_log2(n)):
+            stride = 1 << k
+            perm = [(i, i ^ stride) for i in range(n)]
+            recv = net.ppermute(x, perm)
+            x = jax.tree.map(fn, x, recv)
+        return x
+    rs, shape_info = _reduce_scatter_ring(net, x, fn)
+    return _allgather_unpad(net, rs, shape_info)
+
+
+def reduce_scatter(net: NetOps, x, op: str = "sum",
+                   combine: Callable | None = None):
+    """Ring reduce-scatter; returns this PE's owned chunk of the flattened,
+    padded array plus the info needed to allgather/unpad it."""
+    fn = combine or OPS[op]
+    return _reduce_scatter_ring(net, x, fn)
+
+
+def _reduce_scatter_ring(net: NetOps, x, fn):
+    """Ring reduce-scatter with the static schedule (§Perf P1): one
+    pre-rotation puts every stage's chunk at a STATIC offset, so the loop
+    body is free of dynamic slicing (r block t = chunk (pe + t) mod n)."""
+    n = net.n_pes
+    sim = isinstance(net, SimNetOps)
+    orig_shape = x.shape[1:] if sim else x.shape
+    size = int(np.prod(orig_shape))
+    chunk = -(-size // n)
+    padded = chunk * n
+    pe = net.my_pe()
+
+    def flatpad(v):
+        f = v.reshape(-1)
+        return jnp.pad(f, (0, padded - size))
+
+    buf = _lmap(net, flatpad, x)
+    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
+        else (pe + jnp.arange(n)) % n
+    r = _take_blocks(net, buf, idx, n, 0)
+    ring = [(i, (i + 1) % n) for i in range(n)]
+
+    def static_chunk(b, t):
+        return b[..., t * chunk:(t + 1) * chunk] if sim \
+            else b[t * chunk:(t + 1) * chunk]
+
+    cur = static_chunk(r, 0)                     # chunk[pe]
+    for j in range(1, n):
+        cur = net.ppermute(cur, ring)
+        cur = fn(static_chunk(r, n - j), cur)    # chunk[(pe - j) mod n]
+    # PE p now owns the fully-reduced chunk (p + 1) % n
+    own_idx = (pe + 1) % n
+    info = (orig_shape, size, chunk, own_idx)
+    return cur, info
+
+
+def _allgather_unpad(net: NetOps, chunk_val, info):
+    """Ring allgather of the reduce-scatter result, static schedule: parts
+    arrive in ring order; one post-gather restores block order."""
+    orig_shape, size, chunk, own_idx = info
+    n = net.n_pes
+    sim = isinstance(net, SimNetOps)
+    pe = net.my_pe()
+    ring = [(i, (i + 1) % n) for i in range(n)]
+    parts = [chunk_val]                 # part t = chunk (pe + 1 - t) mod n
+    cur = chunk_val
+    for j in range(1, n):
+        cur = net.ppermute(cur, ring)
+        parts.append(cur)
+    stacked = jnp.concatenate(parts, axis=-1)
+    # out block i = part (pe + 1 - i) mod n
+    idx = (pe[..., None] + 1 - jnp.arange(n)) % n if sim \
+        else (pe + 1 - jnp.arange(n)) % n
+    out = _take_blocks(net, stacked, idx, n, 0)
+
+    def unpad(b):
+        return b[:size].reshape(orig_shape)
+
+    return _lmap(net, unpad, out)
+
+
+def allreduce_stages(n: int, nbytes: float, topo=None, algorithm=None):
+    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    out = []
+    if algo == "rd":
+        for k in range(_ceil_log2(n)):
+            stride = 1 << k
+            out.append((float(nbytes), _stride_hops(stride, n, topo)))
+    else:
+        per = nbytes / n
+        for _ in range(2 * (n - 1)):
+            out.append((per, _stride_hops(1, n, topo)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# alltoall (pairwise exchange — paper Fig. 9)
+# ---------------------------------------------------------------------------
+
+def alltoall(net: NetOps, x, axis: int = 0):
+    """out[src-block] = x_src[my-block]; x's `axis` dim = n_pes * block.
+
+    Static schedule (§Perf P1): one pre-rotation makes every stage's send
+    block a static slice; received parts concatenate in ring order and one
+    post-gather restores block order — no per-stage dynamic updates."""
+    n = net.n_pes
+    if n == 1:
+        return x
+    sim = isinstance(net, SimNetOps)
+    ax = axis + (1 if sim else 0)
+    dim = x.shape[ax]
+    assert dim % n == 0, f"alltoall axis dim {dim} not divisible by n_pes {n}"
+    pe = net.my_pe()
+
+    # pre-rotate: r block t = x block (pe + t) mod n
+    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
+        else (pe + jnp.arange(n)) % n
+    r = _take_blocks(net, x, idx, n, axis)
+    blk = dim // n
+
+    def static_blk(v, t):
+        sl = [slice(None)] * v.ndim
+        sl[ax] = slice(t * blk, (t + 1) * blk)
+        return v[tuple(sl)]
+
+    parts = [static_blk(r, 0)]          # own block: out[pe] = x_pe[pe]
+    for j in range(1, n):
+        perm = [(i, (i + j) % n) for i in range(n)]
+        recv = net.ppermute(static_blk(r, j), perm)
+        parts.append(recv)              # part t = out-block (pe - t) mod n
+    stacked = jnp.concatenate(parts, axis=ax)
+    out_idx = (pe[..., None] - jnp.arange(n)) % n if sim \
+        else (pe - jnp.arange(n)) % n
+    return _take_blocks(net, stacked, out_idx, n, axis)
+
+
+def alltoall_stages(n: int, nbytes_total: float, topo=None):
+    per = nbytes_total / n
+    return [(per, _stride_hops(j, n, topo)) for j in range(1, n)]
+
+
+# ---------------------------------------------------------------------------
+# point-to-point RMA
+# ---------------------------------------------------------------------------
+
+def put(net: NetOps, x, pattern: Sequence[tuple[int, int]]):
+    """One-sided put along a static (src, dst) pattern; PEs not receiving
+    keep zeros (use shmem.put for merge-with-local semantics)."""
+    return net.ppermute(x, pattern)
+
+
+def get(net: NetOps, x, pattern: Sequence[tuple[int, int]]):
+    """get along (requester, owner) pairs: owner pushes — the IPI-get."""
+    inv = [(d, s) for s, d in pattern]
+    return net.ppermute(x, inv)
+
+
+# ---------------------------------------------------------------------------
+# scans (substrate for atomics)
+# ---------------------------------------------------------------------------
+
+def exclusive_scan(net: NetOps, x, op: str = "sum"):
+    """Exclusive scan over the PE axis of a per-PE scalar/array.
+
+    This realizes the observable semantics of concurrent shmem atomics in
+    PE order (DESIGN.md §6): fetch_add's return on PE i = init + sum of
+    contributions of PEs < i."""
+    n = net.n_pes
+    fn = OPS[op]
+    identity = {"sum": 0, "prod": 1, "max": None, "min": None,
+                "and": -1, "or": 0, "xor": 0}[op]
+    sim = isinstance(net, SimNetOps)
+    xb = x[:, None] if (sim and x.ndim == 1) else jnp.expand_dims(x, 0 if not sim else 1)
+    all_vals = fcollect(net, xb, axis=0)
+    pe = net.my_pe()
+
+    def scan_one(vals, i):
+        idx = jnp.arange(n)
+        if identity is None:  # max/min: mask with +-inf
+            fill = jnp.array(jnp.finfo(vals.dtype).min if op == "max"
+                             else jnp.finfo(vals.dtype).max, vals.dtype)
+            masked = jnp.where((idx < i)[(...,) + (None,) * (vals.ndim - 1)], vals, fill)
+            return jnp.max(masked, 0) if op == "max" else jnp.min(masked, 0)
+        masked = jnp.where((idx < i)[(...,) + (None,) * (vals.ndim - 1)], vals,
+                           jnp.array(identity, vals.dtype))
+        if op == "sum":
+            return jnp.sum(masked, 0)
+        if op == "prod":
+            return jnp.prod(masked, 0)
+        red = masked[0]
+        for k in range(1, n):
+            red = fn(red, masked[k])
+        return red
+
+    return _lmap(net, scan_one, all_vals, pe)

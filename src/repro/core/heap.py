@@ -1,0 +1,147 @@
+"""Symmetric heap: the paper's §3.2 brk/sbrk bump allocator, plus pytree
+packing (the framework's gradient-bucket fusion is built on it).
+
+Rules enforced exactly as in the paper:
+  1. free() must be called in reverse order of allocation when followed by
+     further allocations (we check and raise);
+  2. realloc() only on the most recent (re)allocation;
+  3. alignment must be a power of two >= 8 (default 8).
+
+There is no virtual-address abstraction: an allocation *is* an offset into
+one flat symmetric buffer, identical on every PE.  On TPU the flat buffer
+is what lets many small gradient reductions fuse into one large one,
+amortizing the alpha term — the paper's small-message lesson applied at
+pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class HeapError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Allocation:
+    offset: int
+    size: int          # requested bytes
+    seq: int           # allocation sequence number
+
+
+class SymmetricHeap:
+    """Host-side symmetric-heap bookkeeping (offsets are compile-time)."""
+
+    def __init__(self, capacity: int, default_align: int = 8):
+        if default_align < 8 or default_align & (default_align - 1):
+            raise HeapError("default alignment must be a power of 2 >= 8")
+        self.capacity = capacity
+        self.default_align = default_align
+        self._brk = 0           # local base memory tracking pointer
+        self._live: list[Allocation] = []
+        self._seq = 0
+
+    @property
+    def brk(self) -> int:
+        return self._brk
+
+    def sbrk(self, nbytes: int) -> int:
+        """Move the break; returns previous break (like Unix sbrk)."""
+        if self._brk + nbytes > self.capacity:
+            raise HeapError(
+                f"heap exhausted: brk={self._brk} + {nbytes} > {self.capacity}")
+        prev = self._brk
+        self._brk += nbytes
+        return prev
+
+    def malloc(self, nbytes: int, align: int | None = None) -> Allocation:
+        align = align or self.default_align
+        if align < 8 or align & (align - 1):
+            raise HeapError("alignment must be a power of 2 >= 8")
+        base = -(-self._brk // align) * align
+        self.sbrk((base - self._brk) + nbytes)
+        a = Allocation(offset=base, size=nbytes, seq=self._seq)
+        self._seq += 1
+        self._live.append(a)
+        return a
+
+    def align_alloc(self, align: int, nbytes: int) -> Allocation:
+        return self.malloc(nbytes, align=align)
+
+    def free(self, alloc: Allocation) -> None:
+        """Paper rule 1: moves brk back to alloc.offset, implicitly freeing
+        everything allocated after it (so freeing the *first* of a series
+        frees the series)."""
+        if alloc not in self._live:
+            raise HeapError("free of unknown or already-freed allocation")
+        self._live = [a for a in self._live if a.seq < alloc.seq]
+        self._brk = alloc.offset
+
+    def realloc(self, alloc: Allocation, nbytes: int) -> Allocation:
+        """Paper rule 2: only the last (re)allocation may be realloc'd.
+        Contents are NOT copied (the paper declines to waste the space)."""
+        if not self._live or self._live[-1].seq != alloc.seq:
+            raise HeapError("realloc only valid on the last allocation")
+        self._live.pop()
+        self._brk = alloc.offset
+        return self.malloc(nbytes)
+
+    def live_bytes(self) -> int:
+        return self._brk
+
+
+# ---------------------------------------------------------------------------
+# pytree packing onto a symmetric flat buffer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]     # element offsets in the flat buffer
+    total: int                   # total elements (padded)
+    dtype: Any                   # buffer dtype
+
+
+def plan_pack(tree, dtype=None, align_elems: int = 128) -> PackSpec:
+    """Lay a pytree out on a flat symmetric buffer; offsets aligned to the
+    TPU lane count so unpacked views keep friendly layouts."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if dtype is None:
+        dtype = jnp.result_type(*[l.dtype for l in leaves])
+    shapes, dtypes, offsets = [], [], []
+    off = 0
+    for l in leaves:
+        shapes.append(tuple(l.shape))
+        dtypes.append(l.dtype)
+        off = -(-off // align_elems) * align_elems
+        offsets.append(off)
+        off += int(np.prod(l.shape)) if l.shape else 1
+    total = -(-off // align_elems) * align_elems
+    return PackSpec(treedef, tuple(shapes), tuple(dtypes), tuple(offsets),
+                    total, dtype)
+
+
+def pack(tree, spec: PackSpec):
+    leaves = jax.tree.leaves(tree)
+    buf = jnp.zeros((spec.total,), spec.dtype)
+    for l, off in zip(leaves, spec.offsets):
+        buf = jax.lax.dynamic_update_slice(
+            buf, l.astype(spec.dtype).reshape(-1), (off,))
+    return buf
+
+
+def unpack(buf, spec: PackSpec):
+    leaves = []
+    for shape, dt, off in zip(spec.shapes, spec.dtypes, spec.offsets):
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(jax.lax.dynamic_slice(buf, (off,), (n,))
+                      .reshape(shape).astype(dt))
+    return jax.tree.unflatten(spec.treedef, leaves)

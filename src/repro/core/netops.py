@@ -1,0 +1,150 @@
+"""Network primitives: the JAX analogue of the Epiphany memory-mapped NoC.
+
+Two interchangeable backends sit beneath every collective algorithm:
+
+  * ``SpmdNetOps`` — runs inside ``jax.shard_map``; a ``ppermute`` edge is
+    the analogue of an Epiphany memory-mapped remote store (sender-driven,
+    one hop per mesh neighbor on the ICI torus).
+  * ``SimNetOps``  — single-device oracle; arrays carry a leading PE axis
+    and ``ppermute`` is a gather.  Algorithm code is identical, so every
+    collective can be property-tested on one CPU device for arbitrary PE
+    counts (including non-powers-of-two and subsets — the cases the paper
+    notes eLib's 2D indexing cannot express).
+
+Both expose the same minimal surface, so ``collectives.py`` is written once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+AxisNames = str | tuple[str, ...]
+
+
+class NetOps:
+    """Protocol: n_pes, my_pe(), ppermute(), with sender-driven semantics."""
+
+    n_pes: int
+
+    def my_pe(self):
+        raise NotImplementedError
+
+    def ppermute(self, x, perm: Sequence[tuple[int, int]]):
+        """Static point-to-point pattern: for each (src, dst) pair, dst
+        receives src's shard; PEs not named as a dst receive zeros.
+
+        This is the 'remote store' primitive.  Like the Epiphany NoC (and
+        unlike a remote load) it never blocks the sender — which is why a
+        shmem *get* on this substrate is always the paper's IPI-get: the
+        owner pushes (DESIGN.md §2)."""
+        raise NotImplementedError
+
+    # -- helpers shared by both backends ------------------------------------
+    def select(self, pe_mask: np.ndarray, a, b):
+        """Per-PE static selection: where PE's entry in `pe_mask` (a host
+        bool array indexed by pe id) is True take `a` else `b`."""
+        m = jnp.asarray(pe_mask)[self.my_pe()]
+        return jax.tree.map(lambda x, y: jnp.where(m, x, y), a, b)
+
+
+@dataclasses.dataclass
+class SpmdNetOps(NetOps):
+    """Inside shard_map over `axis` (one name or a tuple, flattened
+    row-major into the PE space)."""
+
+    axis: AxisNames
+    n_pes: int = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        self.n_pes = int(lax.axis_size(self.axis))
+
+    def my_pe(self):
+        return lax.axis_index(self.axis)
+
+    def ppermute(self, x, perm):
+        perm = [(int(s), int(d)) for s, d in perm]
+        return jax.tree.map(lambda v: lax.ppermute(v, self.axis, perm), x)
+
+    def axis_all_gather(self, x, *, tiled=True):
+        return jax.tree.map(
+            lambda v: lax.all_gather(v, self.axis, tiled=tiled), x)
+
+    def axis_psum(self, x):
+        return lax.psum(x, self.axis)
+
+
+@dataclasses.dataclass
+class SimNetOps(NetOps):
+    """Single-device simulation: every array carries a leading PE axis."""
+
+    n_pes: int
+
+    def my_pe(self):
+        return jnp.arange(self.n_pes)
+
+    def _expand_pe_index(self, idx, v):
+        return idx.reshape(idx.shape + (1,) * (v.ndim - 1))
+
+    def ppermute(self, x, perm):
+        src_for_dst = np.full((self.n_pes,), -1, dtype=np.int64)
+        for s, d in perm:
+            src_for_dst[int(d) % self.n_pes] = int(s) % self.n_pes
+        has = jnp.asarray(src_for_dst >= 0)
+        gather_idx = jnp.asarray(np.where(src_for_dst >= 0, src_for_dst, 0))
+
+        def one(v):
+            recv = v[gather_idx]
+            mask = self._expand_pe_index(has, v)
+            return jnp.where(mask, recv, jnp.zeros_like(recv))
+
+        return jax.tree.map(one, x)
+
+    def select(self, pe_mask, a, b):
+        m = jnp.asarray(pe_mask)
+
+        def one(x, y):
+            mm = self._expand_pe_index(m, x)
+            return jnp.where(mm, x, y)
+
+        return jax.tree.map(one, a, b)
+
+
+# -- per-PE dynamic slicing helpers (work under both backends) --------------
+
+def dyn_slice_block(net: NetOps, x, block_index, block_size: int, axis: int):
+    """Slice x[..., block_index*block_size : +block_size, ...] where
+    block_index is a per-PE traced scalar.
+
+    Under SPMD `x` is the local shard; under SIM `x` has the leading PE axis
+    and block_index is a vector over PEs (we vmap)."""
+    if isinstance(net, SimNetOps):
+        def one(v, i):
+            starts = [0] * v.ndim
+            sizes = list(v.shape)
+            starts[axis] = i * block_size
+            sizes[axis] = block_size
+            return lax.dynamic_slice(v, starts, sizes)
+        return jax.vmap(one, in_axes=(0, 0))(x, block_index)
+    starts = [0] * x.ndim
+    sizes = list(x.shape)
+    starts[axis] = block_index * block_size
+    sizes[axis] = block_size
+    return lax.dynamic_slice(x, starts, sizes)
+
+
+def dyn_update_block(net: NetOps, x, update, block_index, block_size: int,
+                     axis: int):
+    if isinstance(net, SimNetOps):
+        def one(v, u, i):
+            starts = [0] * v.ndim
+            starts[axis] = i * block_size
+            return lax.dynamic_update_slice(v, u, starts)
+        return jax.vmap(one, in_axes=(0, 0, 0))(x, update, block_index)
+    starts = [0] * x.ndim
+    starts[axis] = block_index * block_size
+    return lax.dynamic_update_slice(x, update, starts)

@@ -1,0 +1,262 @@
+"""ARL-OpenSHMEM-for-Epiphany API surface, bound to a NetOps backend.
+
+The OpenSHMEM 1.3 routine families the paper implements, in JAX:
+
+  setup/query     shmem_init / my_pe / n_pes / ptr      -> ShmemContext
+  RMA             put / get (+ _nbi, quiet, fence)       §3.3-3.4
+  atomics         fetch_add / add / swap / testset       §3.5
+  collectives     barrier_all / barrier / broadcast /
+                  collect / fcollect / reduce(to_all) /
+                  alltoall                                §3.6
+  locks           set_lock / test_lock / clear_lock       §3.7
+
+Semantics notes (DESIGN.md §6): gets are owner-pushed (the paper's
+IPI-get is the *only* get on this substrate); atomics are deterministic
+PE-ordered; `quiet` is an optimization barrier (the DMA-status spin-wait
+analogue — it pins completion of outstanding non-blocking ops before
+anything that follows).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import collectives as coll
+from .netops import NetOps, SimNetOps, SpmdNetOps
+from .topology import MeshTopology
+
+
+@dataclasses.dataclass
+class Future:
+    """Handle for a non-blocking RMA (put_nbi/get_nbi).
+
+    The value is lazily scheduled by XLA (the 'DMA engine'); `quiet()`
+    fences it.  Reading .value before quiet() is legal in JAX but forfeits
+    the ordering guarantee — exactly like reading a DMA target buffer
+    before shmem_quiet on the Epiphany."""
+
+    value: Any
+    _done: bool = False
+
+
+class ShmemContext:
+    """One PE's view of the library (SPMD) or the whole chip's (SIM)."""
+
+    def __init__(self, net: NetOps, topo: MeshTopology | None = None,
+                 use_wand_barrier: bool = False):
+        self.net = net
+        self.topo = topo
+        self.use_wand_barrier = use_wand_barrier
+        self._pending: list[Future] = []
+
+    # -- setup / query ------------------------------------------------------
+    @property
+    def n_pes(self) -> int:
+        return self.net.n_pes
+
+    def my_pe(self):
+        return self.net.my_pe()
+
+    def ptr(self, pe: int, offset: int = 0) -> tuple[int, int]:
+        """shmem_ptr: on Epiphany, remote addresses come from shifting the
+        core coordinates into the high bits.  The analogue of a 'global
+        address' here is the (pe, offset) pair used by static patterns."""
+        return (pe % self.n_pes, offset)
+
+    # -- RMA ------------------------------------------------------------------
+    def put(self, x, pattern: Sequence[tuple[int, int]], local=None):
+        """Deliver src's shard to dst for each (src, dst); PEs not addressed
+        keep `local` (default: their own x)."""
+        local = x if local is None else local
+        recv = self.net.ppermute(x, pattern)
+        dst_mask = np.zeros((self.n_pes,), bool)
+        for _, d in pattern:
+            dst_mask[d % self.n_pes] = True
+        return self.net.select(dst_mask, recv, local)
+
+    def get(self, x, pattern: Sequence[tuple[int, int]], local=None):
+        """(requester, owner) pairs; owner pushes (IPI-get)."""
+        inv = [(o, r) for r, o in pattern]
+        return self.put(x, inv, local=local)
+
+    def iput(self, x, pattern, *, sst: int = 1, dst: int = 1,
+             nelems: int | None = None, local=None):
+        """Strided put (shmem_iput / the paper's §4 proposed non-blocking
+        strided extension over the 2D DMA descriptors): take every sst-th
+        element of the source's leading axis, deliver to every dst-th slot
+        of the target's leading axis."""
+        local = x if local is None else local
+        n = nelems if nelems is not None else (x.shape[-1] // max(sst, 1))
+        sel = x[..., ::sst][..., :n]
+        recv = self.net.ppermute(sel, pattern)
+        dst_mask = np.zeros((self.n_pes,), bool)
+        for _, d in pattern:
+            dst_mask[d % self.n_pes] = True
+        upd = local.at[..., : n * dst:dst].set(recv)
+        return self.net.select(dst_mask, upd, local)
+
+    def iget(self, x, pattern, **kw):
+        inv = [(o, r) for r, o in pattern]
+        return self.iput(x, inv, **kw)
+
+    def put_nbi(self, x, pattern, local=None) -> Future:
+        f = Future(self.put(x, pattern, local=local))
+        self._pending.append(f)
+        return f
+
+    def get_nbi(self, x, pattern, local=None) -> Future:
+        f = Future(self.get(x, pattern, local=local))
+        self._pending.append(f)
+        return f
+
+    def quiet(self, *futures: Future):
+        """Fence outstanding non-blocking ops (DMA-idle spin-wait analogue)."""
+        fs = list(futures) or self._pending
+        if not fs:
+            return ()
+        vals = [f.value for f in fs]
+        fenced = lax.optimization_barrier(tuple(vals))
+        for f, v in zip(fs, fenced):
+            f.value, f._done = v, True
+        self._pending = [f for f in self._pending if not f._done]
+        return fenced
+
+    def fence(self):
+        """Per-target ordering; on this substrate identical to quiet()."""
+        return self.quiet()
+
+    # -- collectives ----------------------------------------------------------
+    def barrier_all(self, token=None):
+        """WAND hardware barrier analogue (zero-payload psum, left to XLA)
+        when enabled, else the dissemination software barrier."""
+        if self.use_wand_barrier and isinstance(self.net, SpmdNetOps):
+            tok = jnp.zeros((), jnp.int32) if token is None else token
+            return self.net.axis_psum(tok)
+        return coll.barrier(self.net, token)
+
+    def barrier(self, token=None):
+        return coll.barrier(self.net, token)
+
+    def broadcast(self, x, root: int = 0):
+        return coll.broadcast(self.net, x, root)
+
+    def collect(self, x, axis: int = 0):
+        return coll.collect(self.net, x, axis)
+
+    def fcollect(self, x, axis: int = 0, algorithm=None):
+        return coll.fcollect(self.net, x, axis, algorithm)
+
+    def to_all(self, x, op: str = "sum", algorithm=None):
+        """shmem_TYPE_OP_to_all."""
+        return coll.allreduce(self.net, x, op, algorithm=algorithm)
+
+    def reduce_scatter(self, x, op: str = "sum"):
+        return coll.reduce_scatter(self.net, x, op)
+
+    def alltoall(self, x, axis: int = 0):
+        return coll.alltoall(self.net, x, axis)
+
+    # -- atomics (§3.5) ---------------------------------------------------------
+    def testset(self, var, value):
+        """The TESTSET primitive: atomically 'test-if-not-zero and
+        conditional write'.  Local (per-PE) flavor; remote flavors compose
+        it with put/get patterns."""
+        old = var
+        new = jnp.where(var == 0, value, var)
+        return old, new
+
+    def atomic_fetch_add(self, var, contrib, pattern: Sequence[tuple[int, int]]):
+        """Each (requester, target): requester adds `contrib` to target's
+        `var`, fetching the pre-update value.  One requester per target per
+        call (a permutation pattern — e.g. the paper's Fig. 5 'tight loop
+        on the next neighboring PE').  Returns (fetched, new_var)."""
+        delivered = self.net.ppermute(contrib, pattern)
+        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
+        tgt_mask = np.zeros((self.n_pes,), bool)
+        for _, t in pattern:
+            tgt_mask[t % self.n_pes] = True
+        new_var = self.net.select(tgt_mask, var + delivered, var)
+        return fetched, new_var
+
+    def atomic_fetch_add_shared(self, var, contrib):
+        """All PEs atomically add to the *same* symmetric var (owned
+        replicated): returns per-PE fetched old value under the
+        deterministic PE ordering (exclusive scan) and the final var."""
+        prefix = coll.exclusive_scan(self.net, contrib, "sum")
+        fetched = var + prefix
+        total = coll.allreduce(self.net, contrib, "sum")
+        return fetched, var + total
+
+    def atomic_swap(self, var, value, pattern):
+        delivered = self.net.ppermute(value, pattern)
+        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
+        tgt_mask = np.zeros((self.n_pes,), bool)
+        for _, t in pattern:
+            tgt_mask[t % self.n_pes] = True
+        new_var = self.net.select(tgt_mask, delivered, var)
+        return fetched, new_var
+
+    def atomic_compare_swap(self, var, cond, value, pattern):
+        delivered = self.net.ppermute(value, pattern)
+        dcond = self.net.ppermute(cond, pattern)
+        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
+        tgt_mask = np.zeros((self.n_pes,), bool)
+        for _, t in pattern:
+            tgt_mask[t % self.n_pes] = True
+        swapped = jnp.where(var == dcond, delivered, var)
+        new_var = self.net.select(tgt_mask, swapped, var)
+        return fetched, new_var
+
+    # -- locks (§3.7) -------------------------------------------------------
+    # The lock lives on PE 0 (as in the paper).  Under SPMD determinism the
+    # arbitration among simultaneous requesters is PE order — the
+    # observable semantics of TESTSET polling with deterministic timing.
+    def set_lock(self, lock, want):
+        """lock: symmetric int32 (0 = free, else 1+holder).  want: per-PE
+        bool.  Returns (granted: per-PE bool, new_lock)."""
+        pe = self.my_pe()
+        ids = jnp.where(want, pe + 1, jnp.zeros_like(pe) + self.n_pes + 1)
+        winner = coll.allreduce(self.net, ids.astype(jnp.int32), "min")
+        free = lock == 0
+        granted = free & want & (winner == pe + 1)
+        new_lock = jnp.where(free & (winner <= self.n_pes),
+                             winner.astype(lock.dtype), lock)
+        return granted, new_lock
+
+    def test_lock(self, lock, want):
+        """Non-blocking acquire: same as set_lock but losers simply fail
+        (return False) instead of spinning."""
+        return self.set_lock(lock, want)
+
+    def clear_lock(self, lock, holder_releases):
+        pe = self.my_pe()
+        is_holder = lock == (pe + 1).astype(lock.dtype)
+        release = coll.allreduce(
+            self.net, (is_holder & holder_releases).astype(jnp.int32), "max")
+        return jnp.where(release > 0, jnp.zeros_like(lock), lock)
+
+    # -- critical section combinator -----------------------------------------
+    def critical(self, state, fn):
+        """Serialize fn over PEs in rank order: PE k applies fn to the
+        state produced by PE k-1 (lock-protected update region analogue)."""
+        n = self.n_pes
+        pe = self.my_pe()
+        for turn in range(n):
+            updated = fn(state)
+            mask = np.arange(n) == turn
+            mine = self.net.select(mask, updated, state)
+            state = coll.broadcast(self.net, mine, root=turn)
+        return state
+
+
+def spmd_ctx(axis, topo=None, **kw) -> ShmemContext:
+    return ShmemContext(SpmdNetOps(axis), topo, **kw)
+
+
+def sim_ctx(n_pes: int, topo=None, **kw) -> ShmemContext:
+    return ShmemContext(SimNetOps(n_pes), topo, **kw)

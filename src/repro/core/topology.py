@@ -1,0 +1,104 @@
+"""2D/3D processing-element topology, after the Epiphany eMesh.
+
+The paper's collectives are hop-count aware: the farthest-first broadcast
+tree explicitly moves data the greatest mesh distance first so later stages
+do not add congestion (paper §3.6).  On TPU the ICI torus plays the NoC
+role; this module provides the PE <-> coordinate maps and hop metrics the
+algorithms and the alpha-beta cost model use.
+
+Unlike eLib's 2D row/column indexing (which the paper criticizes for not
+addressing "arbitrary numbers of working cores or disabled cores"), PEs
+here are a dense 0..N-1 rank space with an explicit active-set mapping, so
+subsets and non-power-of-two groups are first-class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """A d-dimensional mesh/torus of PEs.
+
+    shape  : extent per dimension, e.g. (4, 4) for Epiphany-III,
+             (16, 16) for one v5e pod, (2, 16, 16) for two pods.
+    torus  : whether each dimension wraps (ICI axes do; the Epiphany
+             eMesh does not).
+    link_cost : relative per-hop cost multiplier per dimension (the "pod"
+             axis rides DCN, ~10x an ICI hop).
+    """
+
+    shape: tuple[int, ...]
+    torus: tuple[bool, ...] | None = None
+    link_cost: tuple[float, ...] | None = None
+
+    @property
+    def n_pes(self) -> int:
+        return math.prod(self.shape)
+
+    def _torus(self) -> tuple[bool, ...]:
+        return self.torus if self.torus is not None else tuple(True for _ in self.shape)
+
+    def _cost(self) -> tuple[float, ...]:
+        return self.link_cost if self.link_cost is not None else tuple(1.0 for _ in self.shape)
+
+    def coords(self, pe: int) -> tuple[int, ...]:
+        """Row-major rank -> coordinate (last dim fastest)."""
+        out = []
+        for extent in reversed(self.shape):
+            out.append(pe % extent)
+            pe //= extent
+        return tuple(reversed(out))
+
+    def rank(self, coords: Sequence[int]) -> int:
+        pe = 0
+        for c, extent in zip(coords, self.shape):
+            pe = pe * extent + (c % extent)
+        return pe
+
+    def hops(self, a: int, b: int) -> float:
+        """Weighted hop distance between two PEs (X-then-Y dimension-ordered
+        routing, like the eMesh)."""
+        ca, cb = self.coords(a), self.coords(b)
+        total = 0.0
+        for x, y, extent, wrap, cost in zip(ca, cb, self.shape, self._torus(), self._cost()):
+            d = abs(x - y)
+            if wrap:
+                d = min(d, extent - d)
+            total += d * cost
+        return total
+
+    def max_hops(self) -> float:
+        total = 0.0
+        for extent, wrap, cost in zip(self.shape, self._torus(), self._cost()):
+            d = extent - 1
+            if wrap:
+                d = extent // 2
+            total += d * cost
+        return total
+
+    def farthest_first(self, root: int, pes: Sequence[int]) -> list[int]:
+        """Order `pes` by decreasing hop distance from `root` (paper §3.6:
+        'moving the data the farthest distance first')."""
+        return sorted(pes, key=lambda p: (-self.hops(root, p), p))
+
+
+def epiphany3() -> MeshTopology:
+    """The paper's chip: 4x4 mesh, no wraparound."""
+    return MeshTopology(shape=(4, 4), torus=(False, False))
+
+
+def v5e_pod() -> MeshTopology:
+    """One 256-chip pod: 16x16 ICI torus."""
+    return MeshTopology(shape=(16, 16))
+
+
+def v5e_multipod(pods: int = 2) -> MeshTopology:
+    """`pods` pods linked over DCN: DCN hop ~10x an ICI hop."""
+    return MeshTopology(
+        shape=(pods, 16, 16),
+        torus=(False, True, True),
+        link_cost=(10.0, 1.0, 1.0),
+    )

@@ -1,0 +1,93 @@
+"""put_copy — the paper's hand-tuned shmem_put memcpy, as a Pallas kernel.
+
+The Epiphany version used a zero-overhead hardware loop with 4-way unrolled
+staggered double-word loads/remote-stores (8 B / 2 clk peak) plus an
+unaligned edge path.  The TPU translation (DESIGN.md §2):
+
+  * the double-word register pair  -> an (8, 128) VMEM tile (sublane x lane);
+  * the hardware loop              -> the Pallas grid;
+  * 4-way unrolling                -> a row-multiple block shape (the Mosaic
+    compiler pipelines tile loads the way the staggered unroll did);
+  * the unaligned edge path        -> wrapper-side padding to tile multiples
+    with a masked final store (ops.py), since TPU stores are tile-granular
+    exactly like Epiphany dword stores were 8-byte-granular.
+
+Also provides the 2D-strided descriptor copy that mirrors the e-DMA
+engine's 2D stride capability (paper §3.4) — the substrate a strided
+put_nbi extension would use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# (sublane, lane) tile; rows a 4x multiple of the 8-row sublane tile — the
+# analogue of the 4-way unrolled dword loop.
+BLOCK_ROWS = 32
+BLOCK_COLS = 128
+
+
+def _copy_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def put_copy_2d(src: jax.Array, *, block_rows: int = BLOCK_ROWS,
+                block_cols: int = BLOCK_COLS, interpret: bool = False):
+    """Tiled copy of a 2D array (rows, cols), rows % block_rows == 0 and
+    cols % block_cols == 0 (the fast path; ops.py pads the edge case)."""
+    rows, cols = src.shape
+    assert rows % block_rows == 0 and cols % block_cols == 0, (rows, cols)
+    grid = (rows // block_rows, cols // block_cols)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(src.shape, src.dtype),
+        interpret=interpret,
+    )(src)
+
+
+def _strided_kernel(src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def dma_copy_2d(src: jax.Array, dst: jax.Array, *, src_origin: tuple[int, int],
+                dst_origin: tuple[int, int], region: tuple[int, int],
+                block_rows: int = BLOCK_ROWS, block_cols: int = BLOCK_COLS,
+                interpret: bool = False):
+    """2D-strided DMA-descriptor copy: move `region` from `src` at
+    `src_origin` into `dst` at `dst_origin` (block-aligned origins/region —
+    the descriptor granularity).  Returns the updated dst."""
+    (sr, sc), (dr, dc), (nr, nc) = src_origin, dst_origin, region
+    assert nr % block_rows == 0 and nc % block_cols == 0
+    assert sr % block_rows == 0 and sc % block_cols == 0
+    assert dr % block_rows == 0 and dc % block_cols == 0
+    grid = (nr // block_rows, nc // block_cols)
+    sro, sco = sr // block_rows, sc // block_cols
+    dro, dco = dr // block_rows, dc // block_cols
+
+    def dst_index(i, j):
+        return (dro + i, dco + j)
+
+    def _kernel(src_ref, dst_in_ref, dst_ref):
+        del dst_in_ref  # aliased with dst_ref; untouched blocks stay put
+        dst_ref[...] = src_ref[...]
+
+    # input_output_aliasing keeps the untouched part of dst in place.
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, block_cols),
+                               lambda i, j: (sro + i, sco + j)),
+                  pl.BlockSpec((block_rows, block_cols), dst_index)],
+        out_specs=pl.BlockSpec((block_rows, block_cols), dst_index),
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(src, dst)
+    return out

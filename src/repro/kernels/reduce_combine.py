@@ -1,0 +1,58 @@
+"""reduce_combine — the fused per-stage combine of the paper's reductions.
+
+Every stage of the dissemination/ring reduction (collectives.allreduce)
+does `local = op(local, received)` over the symmetric work array.  On
+Epiphany this ran as a hardware-loop over SRAM; on TPU it is a VPU
+elementwise pass whose only performance question is tiling.  The kernel
+fuses the combine for a *list* of k received buffers (k-ary combine),
+which on real hardware removes k-1 HBM round-trips when a PE receives
+from several peers in one super-step (e.g. fused gradient buckets).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 32
+BLOCK_COLS = 128
+
+_OPS = {
+    "sum": lambda a, b: a + b,
+    "prod": lambda a, b: a * b,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _combine_kernel(op, k, *refs):
+    *in_refs, out_ref = refs
+    acc = in_refs[0][...]
+    fn = _OPS[op]
+    for r in in_refs[1:]:
+        acc = fn(acc, r[...])
+    out_ref[...] = acc
+
+
+def reduce_combine_2d(bufs: list[jax.Array], op: str = "sum", *,
+                      block_rows: int = BLOCK_ROWS,
+                      block_cols: int = BLOCK_COLS,
+                      interpret: bool = False):
+    """Fused elementwise op over k same-shape 2D buffers (block-multiple
+    shapes; ops.py pads the edge case)."""
+    assert len(bufs) >= 2
+    rows, cols = bufs[0].shape
+    assert all(b.shape == (rows, cols) for b in bufs)
+    assert rows % block_rows == 0 and cols % block_cols == 0
+    grid = (rows // block_rows, cols // block_cols)
+    spec = pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, op, len(bufs)),
+        grid=grid,
+        in_specs=[spec] * len(bufs),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(bufs[0].shape, bufs[0].dtype),
+        interpret=interpret,
+    )(*bufs)

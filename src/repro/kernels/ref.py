@@ -1,0 +1,203 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core import collectives as coll
+
+NEG_INF = -1e30
+
+
+def put_copy_ref(src):
+    return jnp.asarray(src) + 0  # identity copy
+
+
+def dma_copy_ref(src, dst, *, src_origin, dst_origin, region):
+    (sr, sc), (dr, dc), (nr, nc) = src_origin, dst_origin, region
+    block = jax.lax.dynamic_slice(src, (sr, sc), (nr, nc))
+    return jax.lax.dynamic_update_slice(dst, block, (dr, dc))
+
+
+def reduce_combine_ref(bufs, op: str = "sum"):
+    fn = coll.OPS[op]
+    acc = bufs[0]
+    for b in bufs[1:]:
+        acc = fn(acc, b)
+    return acc
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  sm_scale=None, lk_valid=None):
+    """q: (B,Hq,Lq,D); k,v: (B,Hkv,Lk,D). Dense reference attention."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    lk_valid = lk if lk_valid is None else lk_valid
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    # matmuls run in the input dtype with f32 accumulation (MXU-style);
+    # avoids materializing f32 copies of q/k/v (§Perf P4)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) * sm_scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_pos = jnp.arange(lq)[:, None]
+    k_pos = jnp.arange(lk)[None, :]
+    mask = k_pos < lk_valid
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vv,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def attention_blockwise(q, k, v, *, causal=True, window=None, softcap=None,
+                        sm_scale=None, lk_valid=None, block: int = 1024,
+                        unroll: bool = False):
+    """Flash-style attention in pure XLA: lax.scan over KV blocks with
+    online-softmax carries.  O(Lq*block) memory instead of O(Lq*Lk) — the
+    long-context (32k prefill) path on any backend, same math as the
+    Pallas kernel.  Freely differentiable (scan transposes)."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    dv = v.shape[-1]                      # may differ from d (MLA)
+    group = hq // hkv
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    lk_valid = lk if lk_valid is None else lk_valid
+    pad = (-lk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = k.shape[2] // block
+    kb = jnp.moveaxis(k.reshape(b, hkv, nblk, block, d), 2, 0)
+    vb = jnp.moveaxis(v.reshape(b, hkv, nblk, block, dv), 2, 0)
+    qf = q * jnp.asarray(sm_scale, q.dtype)
+    q_pos = jnp.arange(lq)[:, None]
+
+    def body(carry, inp):
+        acc, m_i, l_i = carry
+        kk, vv, start = inp
+        kk = jnp.repeat(kk, group, axis=1)
+        vv = jnp.repeat(vv, group, axis=1)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kk,
+                            preferred_element_type=jnp.float32)
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = start + jnp.arange(block)[None, :]
+        mask = k_pos < lk_valid
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (k_pos > q_pos - window)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(logits, -1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, -1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd",
+                                       p.astype(vv.dtype), vv,
+                                       preferred_element_type=jnp.float32)
+        return (acc, m_new, l_new), ()
+
+    acc0 = jnp.zeros((b, hq, lq, dv), jnp.float32)
+    m0 = jnp.full((b, hq, lq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, lq, 1), jnp.float32)
+    starts = jnp.arange(nblk) * block
+    (acc, m_i, l_i), _ = jax.lax.scan(body, (acc0, m0, l0),
+                                      (kb, vb, starts),
+                                      unroll=nblk if unroll else 1)
+    return (acc / jnp.maximum(l_i, 1e-30)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, h0=None):
+    """Sequential-scan oracle for the SSD kernel.
+    x: (B,L,H,P); dt: (B,L,H); a_log: (H,); b_mat/c_mat: (B,L,G,N)."""
+    bsz, length, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    group = h // g
+    bm = jnp.repeat(b_mat, group, axis=2)   # (B,L,H,N)
+    cm = jnp.repeat(c_mat, group, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp           # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(a_log[None, :] * dt_t)[..., None, None]   # (B,H,1,1)
+        upd = (dt_t[..., None, None] * x_t[..., :, None] *
+               b_t[..., None, :])                                  # (B,H,P,N)
+        state = decay * state.astype(jnp.float32) + upd
+        y_t = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cm, 1, 0).astype(jnp.float32))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                    # (B,L,H,P)
+    return y, h_final
+
+
+def ssd_chunked_ref(x, dt, a_log, b_mat, c_mat, h0=None, chunk: int = 128,
+                    unroll: bool = False):
+    """Chunked SSD in pure jnp — same math as the kernel, used as the
+    models' XLA path (fast on any backend, exercised by the dry-run)."""
+    bsz, length, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    group = h // g
+    assert length % chunk == 0
+    nc = length // chunk
+    bm = jnp.repeat(b_mat, group, axis=2)
+    cm = jnp.repeat(c_mat, group, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    bc = bm.reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+    cc = cm.reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+
+    a_dt = a_log[None, None, None, :] * dtc                  # (B,nc,Q,H)
+    s = jnp.cumsum(a_dt, axis=2)
+    s_last = s[:, :, -1:, :]
+
+    t_idx = jnp.arange(chunk)[:, None]
+    u_idx = jnp.arange(chunk)[None, :]
+    tri = (t_idx >= u_idx)
+
+    cb = jnp.einsum("bcthn,bcuhn->bchtu", cc, bc)
+    # decay[t,u] = exp(s_t - s_u), masked in the EXPONENT: the t<u triangle
+    # would overflow exp(+large) to inf, and where(tri, inf*0, 0) still
+    # poisons gradients (inf * 0 -> NaN in the VJP)
+    delta = (s.transpose(0, 1, 3, 2)[..., :, None]
+             - s.transpose(0, 1, 3, 2)[..., None, :])        # (B,nc,H,Q,Q)
+    decay = jnp.exp(jnp.where(tri[None, None, None], delta, -1e30))
+    m = decay * cb * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchtu,bcuhp->bcthp", m, xc)
+
+    # inter-chunk states, sequential over nc (the only remaining recurrence)
+    w = xc * (dtc * jnp.exp(s_last - s))[..., None]           # (B,nc,Q,H,P)
+    chunk_upd = jnp.einsum("bcuhp,bcuhn->bchpn", w, bc)       # per-chunk sum
+    chunk_decay = jnp.exp(s_last[:, :, 0, :])                 # (B,nc,H)
+
+    def step(state, inp):
+        upd, dec, c_blk, s_blk = inp
+        y_inter = jnp.exp(s_blk).transpose(0, 2, 1)[..., None] * jnp.einsum(
+            "bthn,bhpn->bhtp", c_blk, state)                  # (B,H,Q,P)
+        state = dec[..., None, None] * state + upd
+        return state, y_inter
+
+    xs = (jnp.moveaxis(chunk_upd, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+          jnp.moveaxis(cc, 1, 0), jnp.moveaxis(s, 1, 0))
+    h_final, y_inter = jax.lax.scan(step, h0, xs,
+                                    unroll=nc if unroll else 1)
+    y_inter = jnp.moveaxis(y_inter, 0, 1).transpose(0, 1, 3, 2, 4)  # (B,nc,Q,H,P)
+    y = (y_intra + y_inter).reshape(bsz, length, h, p).astype(x.dtype)
+    return y, h_final

@@ -1,0 +1,114 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas kernel.
+
+The hot spot of the `mamba2-2.7b` / `zamba2-1.2b` architectures.  The SSD
+trick: split the sequence into chunks of Q steps; inside a chunk the SSM is
+a (masked, decay-weighted) attention-like matmul that feeds the MXU, and
+only the chunk boundary states recur — the sequential dependency shrinks
+from L steps to L/Q.
+
+Per (batch, head) grid cell the kernel streams chunks through VMEM, carrying
+the (P, N) state in an f32 accumulator:
+
+  decay     s_t   = cumsum(A * dt)                within chunk
+  intra     y    += ((C B^T) * exp(s_t - s_u) * dt_u, masked u<=t) @ x
+  inter     y    += exp(s_t) * (C @ state^T)
+  state     h'    = exp(s_Q) h + (x * dt * exp(s_Q - s_u))^T @ B
+
+All matmuls are (Q x N)(N x Q), (Q x Q)(Q x P), (P x Q)(Q x N) with
+Q = N = 128 by default — MXU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
+                *, length: int, chunk: int):
+    a_log = a_ref[0].astype(jnp.float32)                     # scalar A (<0)
+    n_chunks = length // chunk
+
+    def body(i, state):
+        sl = (0, pl.ds(i * chunk, chunk))
+        x = pl.load(x_ref, sl + (0, slice(None))).astype(jnp.float32)   # (Q,P)
+        dt = pl.load(dt_ref, sl + (0,)).astype(jnp.float32)             # (Q,)
+        bm = pl.load(b_ref, sl + (0, slice(None))).astype(jnp.float32)  # (Q,N)
+        cm = pl.load(c_ref, sl + (0, slice(None))).astype(jnp.float32)  # (Q,N)
+
+        a_dt = a_log * dt                                    # (Q,)  <= 0
+        s = jnp.cumsum(a_dt)                                 # (Q,)
+        s_last = s[-1]
+
+        # intra-chunk: M[t,u] = exp(s_t - s_u) * dt_u * (C_t . B_u), u <= t
+        cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+        t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        u_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        # mask in the exponent: exp(+large) in the t<u triangle is inf
+        decay = jnp.exp(jnp.where(t_idx >= u_idx,
+                                  s[:, None] - s[None, :], -1e30))
+        m = cb * decay * dt[None, :]
+        y = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (Q,P)
+
+        # inter-chunk: exp(s_t) * C_t . state (state: (P,N))
+        y += jnp.exp(s)[:, None] * jax.lax.dot_general(
+            cm, state, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        # state update
+        w = (x * (dt * jnp.exp(s_last - s))[:, None])        # (Q,P)
+        state = jnp.exp(s_last) * state + jax.lax.dot_general(
+            w, bm, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (P,N)
+
+        pl.store(y_ref, sl + (0, slice(None)), y.astype(y_ref.dtype))
+        return state
+
+    state0 = h0_ref[0, 0].astype(jnp.float32)
+    state = jax.lax.fori_loop(0, n_chunks, body, state0)
+    hout_ref[0, 0] = state.astype(hout_ref.dtype)
+
+
+def ssd_scan(x, dt, a_log, b_mat, c_mat, h0=None, *,
+             chunk: int = DEFAULT_CHUNK, interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); a_log: (H,) (negative);
+    b_mat, c_mat: (B, L, G, N) with H % G == 0; h0: (B, H, P, N) or None.
+    L % chunk == 0 (ops.py pads).  Returns (y, h_final)."""
+    bsz, length, h, p = x.shape
+    _, _, g, n = b_mat.shape
+    group = h // g
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, length=length, chunk=chunk)
+    grid = (bsz, h)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, length, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, length, 1), lambda b, hh: (b, 0, hh)),
+            pl.BlockSpec((1,), lambda b, hh: (hh,)),
+            pl.BlockSpec((1, length, 1, n),
+                         lambda b, hh: (b, 0, hh // group, 0)),
+            pl.BlockSpec((1, length, 1, n),
+                         lambda b, hh: (b, 0, hh // group, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh: (b, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, length, 1, p), lambda b, hh: (b, 0, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b, hh: (b, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a_log, b_mat, c_mat, h0)
+    return y, hout

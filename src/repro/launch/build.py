@@ -1,0 +1,183 @@
+"""Step-assembly helpers shared by train.py / serve.py / dryrun.py.
+
+Everything needed to go from (arch config, mesh, comm backend) to jitted,
+shard_mapped, correctly-sharded step functions — including abstract
+(eval_shape) parameter/optimizer/cache trees for the dry-run path where
+nothing is ever allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer
+from ..models.config import ModelConfig, SHAPES, input_specs
+from ..parallel import sharding
+from ..parallel.comm import AxisSpec
+from ..serve import step as sstep
+from ..train import optimizer as opt
+from ..train import step as tstep
+
+
+def mesh_dims(mesh) -> tuple[int, int, int | None]:
+    d = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return d["data"], d["model"], d.get("pod")
+
+
+def axis_spec(mesh, cfg=None) -> AxisSpec:
+    pod = "pod" if "pod" in mesh.axis_names else None
+    if cfg is not None and cfg.shard_strategy == "dp_only":
+        return AxisSpec(model=None, pod=pod)
+    return AxisSpec(pod=pod)
+
+
+def mesh_axes(mesh, cfg=None) -> sharding.MeshAxes:
+    pod = "pod" if "pod" in mesh.axis_names else None
+    if cfg is not None and cfg.shard_strategy == "dp_only":
+        return sharding.MeshAxes(model=None, pod=pod)
+    return sharding.MeshAxes(pod=pod)
+
+
+def eff_tp(cfg: ModelConfig, mesh) -> int:
+    return 1 if cfg.shard_strategy == "dp_only" else mesh_dims(mesh)[1]
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    dp, _tp, pod = mesh_dims(mesh)
+    tp = eff_tp(cfg, mesh)
+    shapes = jax.eval_shape(lambda k: transformer.init_params(
+        k, cfg, tp, dp), jax.random.key(0))
+    shapes = sharding.fsdp_localize(cfg, shapes, dp)
+    specs = sharding.param_specs(cfg, shapes, mesh_axes(mesh, cfg), tp)
+    return shapes, specs
+
+
+def global_shape(local_shape_tree, spec_tree, mesh):
+    """Local (per-chip) ShapeDtypeStructs -> global ones, per the specs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(s, spec):
+        shape = list(s.shape)
+        for i, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            for a in axs:
+                shape[i] *= sizes[a]
+        return jax.ShapeDtypeStruct(tuple(shape), s.dtype)
+
+    return jax.tree.map(one, local_shape_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def shard_mapped(fn, mesh, in_specs, out_specs):
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def make_init_fn(cfg: ModelConfig, mesh, backend: str = "shmem"):
+    """Jittable global param init: per-chip shards initialized inside
+    shard_map.  All chips use the same key, so replicated leaves (KV proj,
+    norms, routers) are bitwise identical everywhere and sharded leaves
+    are consistent shard-local draws."""
+    dp, _tp, _pod = mesh_dims(mesh)
+    tp = eff_tp(cfg, mesh)
+    shapes, specs = abstract_params(cfg, mesh)
+
+    def init(key):
+        import jax.lax as lax
+        p = transformer.init_params(key, cfg, tp, dp)
+        if cfg.fsdp:
+            p = sharding.fsdp_shard_init(cfg, p, lax.axis_index("data"), dp)
+        return p
+
+    return shard_mapped(init, mesh, (P(),), specs), shapes, specs
+
+
+def make_train_step(cfg: ModelConfig, mesh, backend: str = "shmem",
+                    fuse_grads: bool = True, allreduce_algo: str = "paper",
+                    grad_rs: bool = False):
+    dp, tp, pod = mesh_dims(mesh)
+    axes = axis_spec(mesh, cfg)
+    shapes, pspecs = abstract_params(cfg, mesh)
+    ocfg = opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
+    ostate_shapes = jax.eval_shape(lambda p: opt.init_state(p, ocfg), shapes)
+    ospecs = jax.tree.map(lambda _: P(), ostate_shapes)
+    # moment states follow param sharding (q/scale leaves share dim 0)
+    ospecs = _opt_specs(ostate_shapes, pspecs, ocfg)
+    step = tstep.build_train_step(cfg, axes, backend, adamw=ocfg,
+                                  fuse_grads=fuse_grads,
+                                  allreduce_algo=allreduce_algo,
+                                  grad_rs=grad_rs)
+    bspecs_fn = lambda batch: sharding.batch_specs(
+        cfg, batch, mesh_axes(mesh, cfg), "train")
+    def wrap(batch_tree):
+        bs = bspecs_fn(batch_tree)
+        return shard_mapped(step, mesh, (pspecs, ospecs, bs),
+                            (P(), pspecs, ospecs))
+    return wrap, (shapes, pspecs), (ostate_shapes, ospecs), ocfg
+
+
+def _opt_specs(ostate_shapes, pspecs, ocfg):
+    """Moments inherit the param spec (f32/bf16); int8 states are flat
+    blockwise (q, scale) pairs and stay chip-local (P())."""
+    def per_param(pspec):
+        if ocfg.moment_dtype in ("f32", "bf16"):
+            return {"m": pspec, "v": pspec}
+        rep = {"q": P(), "scale": P()}
+        return {"m": rep, "v": rep}
+
+    mv = jax.tree.map(per_param, pspecs,
+                      is_leaf=lambda x: isinstance(x, P))
+    return {"mv": mv, "step": P()}
+
+
+def make_serve_steps(cfg: ModelConfig, mesh, shape_name: str,
+                     backend: str = "shmem"):
+    """(prefill_fn, decode_fn, cache_shapes, cache_specs) for a shape."""
+    import dataclasses
+    cfg = dataclasses.replace(cfg, fsdp=False)   # serving never fsdp
+    dp, tp, pod = mesh_dims(mesh)
+    axes = axis_spec(mesh)
+    shapes, pspecs = abstract_params(cfg, mesh)
+    s = SHAPES[shape_name]
+    B, Lc = s["global_batch"], s["seq_len"]
+    data_total = dp * (pod or 1)
+    seq_shards = 1
+    if s["kind"] == "decode" and B < data_total:
+        # tiny-batch long-context: shard the cache sequence over data
+        seq_shards = dp
+    batch_local = B // data_total if seq_shards == 1 else B
+    if s["kind"] == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, tp, batch_local,
+                                           Lc, seq_shards))
+        cspecs = sharding.cache_specs(cfg, cache_shapes, mesh_axes(mesh),
+                                      seq_shards)
+    else:  # prefill / encoder forward: no decode cache exists
+        cache_shapes, cspecs = None, None
+    prefill = sstep.build_prefill(cfg, axes, backend)
+    decode = sstep.build_decode_step(cfg, axes, backend, seq_shards)
+
+    bdim = ("pod", "data") if pod else "data"
+
+    def wrap_prefill(batch_tree):
+        bs = sharding.batch_specs(cfg, batch_tree, mesh_axes(mesh),
+                                  "prefill")
+        return shard_mapped(prefill, mesh, (pspecs, bs),
+                            P(bdim, None, "model"))
+
+    def wrap_decode(batch_tree):
+        bs = sharding.batch_specs(cfg, batch_tree, mesh_axes(mesh),
+                                  "decode", seq_shards)
+        logits_spec = P(None if seq_shards > 1 else
+                        (("pod", "data") if pod else "data"), None, "model")
+        return shard_mapped(decode, mesh, (pspecs, cspecs, bs),
+                            (logits_spec, cspecs))
+
+    return wrap_prefill, wrap_decode, (cache_shapes, cspecs), \
+        (shapes, pspecs), seq_shards

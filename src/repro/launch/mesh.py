@@ -1,0 +1,26 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, DCN pod axis)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_mesh(data: int, model: int, pod: int | None = None):
+    """Elastic variant: any (pod,) data x model factorization — the
+    fault-tolerance path reshards checkpoints onto these."""
+    if pod:
+        return _mk((pod, data, model), ("pod", "data", "model"))
+    return _mk((data, model), ("data", "model"))

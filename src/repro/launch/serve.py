@@ -1,0 +1,92 @@
+"""Serving launcher: batched prefill + autoregressive decode loop.
+
+  python -m repro.launch.serve --arch qwen2-0.5b --smoke --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--comm", default="shmem", choices=["shmem", "xla"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    from ..configs import get_config, smoke_config
+    from ..models import transformer
+    from ..parallel.comm import AxisSpec, Comm
+    from ..serve import step as sstep
+    from . import build
+    from .mesh import make_mesh
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, fsdp=False)
+    if cfg.is_encoder:
+        raise SystemExit("encoder-only arch has no decode loop")
+    mesh = make_mesh(args.data, args.model)
+    dp, tp, _ = build.mesh_dims(mesh)
+    B = args.batch
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, cfg.vocab, size=(B, args.prompt_len),
+                          dtype=np.int32)
+
+    with jax.set_mesh(mesh):
+        init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh)
+        params = jax.jit(init_fn)(jax.random.key(0))
+
+        cshapes = jax.eval_shape(lambda: transformer.init_cache(
+            cfg, tp, B // dp, args.cache_len, 1))
+        from ..parallel import sharding
+        cspecs = sharding.cache_specs(cfg, cshapes, build.mesh_axes(mesh), 1)
+        cache = jax.jit(build.shard_mapped(
+            lambda: transformer.init_cache(cfg, tp, B // dp,
+                                           args.cache_len, 1),
+            mesh, (), cspecs))()
+
+        decode = sstep.build_decode_step(cfg, build.axis_spec(mesh),
+                                         args.comm, 1)
+        bspec = {"tokens": P("data", None), "positions": P("data")}
+        dstep = jax.jit(build.shard_mapped(
+            decode, mesh, (pspecs, cspecs, bspec),
+            (P("data", None, "model"), cspecs)))
+
+        # prefill by teacher-forcing the prompt through decode steps
+        # (cache-exact; batched prefill fast-path is transformer.prefill)
+        t0 = time.time()
+        tok = prompt[:, :1]
+        out_tokens = []
+        for t in range(args.prompt_len + args.tokens - 1):
+            batch = {"tokens": jnp.asarray(tok),
+                     "positions": jnp.full((B,), t, jnp.int32)}
+            logits, cache = dstep(params, cache, batch)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], -1)).astype(np.int32)
+            if t + 1 < args.prompt_len:
+                tok = prompt[:, t + 1:t + 2]
+            else:
+                tok = nxt[:, None]
+                out_tokens.append(nxt)
+        dt = time.time() - t0
+        gen = np.stack(out_tokens, 1)
+        print(f"[serve] generated {gen.shape} in {dt:.2f}s "
+              f"({B * gen.shape[1] / dt:.1f} tok/s)")
+        print(gen[:, :8])
+        return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Training launcher: real steps on whatever mesh fits this host, with
+checkpoint/restart, straggler hooks, and elastic resume.
+
+  python -m repro.launch.train --arch qwen2-0.5b --steps 50 --smoke \
+         --data 1 --model 1 --ckpt-dir /tmp/ckpt --resume auto
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--pod", type=int, default=0)
+    ap.add_argument("--comm", default="shmem", choices=["shmem", "xla"])
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--allreduce-algo", default="paper",
+                    choices=["paper", "auto"],
+                    help="paper: the paper's PE-count switch; auto: adds "
+                         "the >=1MiB ring switch (EXPERIMENTS §Perf P2)")
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "none", "full", "selective"],
+                    help="override the config remat policy (§Perf P5)")
+    ap.add_argument("--shard-strategy", default=None,
+                    choices=[None, "tp", "dp_only"],
+                    help="dp_only replicates params and uses the model "
+                         "axis as extra DP (§Perf P6)")
+    args = ap.parse_args(argv)
+
+    from ..configs import get_config, smoke_config
+    from ..ckpt import manager as ckpt
+    from ..data.pipeline import SyntheticLM
+    from ..train import optimizer as opt
+    from . import build
+    from .mesh import make_mesh
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    over = {}
+    if args.remat:
+        over["remat"] = args.remat
+    if args.shard_strategy:
+        over["shard_strategy"] = args.shard_strategy
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    mesh = make_mesh(args.data, args.model, args.pod or None)
+    pipe = SyntheticLM(
+        cfg.vocab, args.seq_len, args.batch,
+        frames_dim=cfg.d_model if cfg.frontend == "audio" else None,
+        frontend_tokens=(cfg.n_frontend_tokens
+                         if cfg.frontend == "vision" else 0))
+
+    with jax.set_mesh(mesh):
+        init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh)
+        wrap, _, (oshapes, ospecs), ocfg = build.make_train_step(
+            cfg, mesh, args.comm, allreduce_algo=args.allreduce_algo)
+        ocfg = dataclasses.replace(ocfg, lr=args.lr)
+
+        batch0 = pipe.batch(0)
+        step_fn = jax.jit(wrap(batch0), donate_argnums=(0, 1))
+
+        params = jax.jit(init_fn)(jax.random.key(0))
+        opt_state = jax.jit(build.shard_mapped(
+            lambda p: opt.init_state(p, ocfg), mesh, (pspecs,), ospecs)
+        )(params)
+
+        start = 0
+        ft = None
+        if args.ckpt_dir:
+            ft = ckpt.FaultToleranceManager(args.ckpt_dir,
+                                            save_every=args.ckpt_every)
+            if args.resume == "auto" and ft.resume_step() is not None:
+                start, restored = ckpt.restore(
+                    args.ckpt_dir,
+                    {"params": params, "opt": opt_state})
+                params, opt_state = restored["params"], restored["opt"]
+                print(f"[train] resumed from step {start}")
+
+        losses = []
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = jax.tree.map(jnp.asarray, pipe.batch(step))
+            loss, params, opt_state = step_fn(params, opt_state, batch)
+            loss = float(loss)
+            losses.append(loss)
+            print(f"[train] step {step:5d} loss {loss:8.4f} "
+                  f"({time.time() - t0:.2f}s)")
+            if ft:
+                ft.on_step(step, lambda: {"params": params,
+                                          "opt": opt_state})
+        if ft:
+            ft.finalize(args.steps, lambda: {"params": params,
+                                             "opt": opt_state})
+        assert np.isfinite(losses).all(), "NaN/inf loss"
+        if len(losses) >= 10:
+            a, b = np.mean(losses[:3]), np.mean(losses[-3:])
+            print(f"[train] loss {a:.4f} -> {b:.4f} "
+                  f"({'improved' if b < a else 'no improvement'})")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

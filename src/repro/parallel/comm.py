@@ -1,0 +1,177 @@
+"""Comm — the communication substrate switch: `shmem` (the paper) vs `xla`
+(the eLib-analogue vendor baseline).
+
+Every model/training communication goes through a Comm handle so the whole
+framework can run on either substrate (`--comm shmem|xla`).  Axis roles:
+
+  model  — tensor parallelism (activations allreduce/allgather, vocab-
+           sharded loss reductions, MoE expert alltoall)
+  data   — data parallelism (fused gradient buckets), sequence sharding of
+           KV caches for long-context decode
+  pod    — cross-pod DCN; hierarchical gradient reduction hoists the
+           smallest number of largest messages onto it (DESIGN.md §8)
+
+Inside shard_map only.  All shmem collectives are differentiable because
+they are compositions of lax.ppermute (whose transpose is the reverse
+permute) and arithmetic, so the backward pass automatically runs the
+reversed communication schedule — the manual-TP backward comes for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import collectives as coll
+from ..core.netops import SpmdNetOps
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisSpec:
+    """Mesh axis names by role; tuples are flattened into one PE space.
+    model=None disables tensor parallelism (dp_only strategy): the mesh's
+    model axis then carries extra data parallelism."""
+    data: str | tuple[str, ...] = "data"
+    model: str | tuple[str, ...] | None = "model"
+    pod: str | None = None
+
+    def data_axes(self) -> tuple[str, ...]:
+        d = self.data if isinstance(self.data, tuple) else (self.data,)
+        return d
+
+    def grad_axes(self) -> tuple[str, ...]:
+        """Axes over which gradients are averaged (pod x data)."""
+        return ((self.pod,) if self.pod else ()) + self.data_axes()
+
+
+class Comm:
+    """Substrate-neutral collective surface used by models and training.
+
+    tuning:
+      allreduce_algo : "paper" (dissemination for pow2 / ring otherwise,
+                       §3.6 verbatim) or "auto" (adds the size switch —
+                       ring for >=1MiB payloads; beyond-paper, §Perf P1)
+      grad_rs        : ZeRO-1 style reduce-scatter + allgather gradient
+                       sync instead of allreduce (beyond-paper, §Perf P2)
+    """
+
+    def __init__(self, axes: AxisSpec, backend: str = "shmem",
+                 allreduce_algo: str = "paper", grad_rs: bool = False):
+        assert backend in ("shmem", "xla")
+        self.axes = axes
+        self.backend = backend
+        self.allreduce_algo = allreduce_algo
+        self.grad_rs = grad_rs
+
+    # -- helpers -------------------------------------------------------------
+    def _net(self, axis) -> SpmdNetOps:
+        return SpmdNetOps(axis)
+
+    def axis_size(self, axis) -> int:
+        if axis is None or axis == ():
+            return 1
+        return int(lax.axis_size(axis))
+
+    def axis_index(self, axis):
+        if axis is None or axis == ():
+            return jnp.zeros((), jnp.int32)
+        return lax.axis_index(axis)
+
+    # -- collectives ----------------------------------------------------------
+    def allreduce(self, x, axis, op: str = "sum"):
+        if axis is None or axis == ():
+            return x
+        if self.backend == "xla":
+            if op == "sum":
+                return jax.tree.map(lambda v: lax.psum(v, axis), x)
+            if op == "max":
+                return jax.tree.map(lambda v: lax.pmax(v, axis), x)
+            if op == "min":
+                return jax.tree.map(lambda v: lax.pmin(v, axis), x)
+            raise NotImplementedError(op)
+        net = self._net(axis)
+        algo = None if self.allreduce_algo == "paper" else self.allreduce_algo
+        return jax.tree.map(
+            lambda v: coll.allreduce(net, v, op, algorithm=algo), x)
+
+    def allgather(self, x, axis, *, concat_axis: int = 0):
+        if axis is None or axis == ():
+            return x
+        if self.backend == "xla":
+            return lax.all_gather(x, axis, axis=concat_axis, tiled=True)
+        return coll.fcollect(self._net(axis), x, axis=concat_axis)
+
+    def reduce_scatter(self, x, axis, *, op: str = "sum", scatter_axis: int = 0):
+        if self.backend == "xla":
+            return lax.psum_scatter(x, axis, scatter_dimension=scatter_axis,
+                                    tiled=True)
+        # shmem ring reduce-scatter runs on the flat view; lay the array out
+        # so ring chunks coincide with scatter_axis blocks (no padding).
+        net = self._net(axis)
+        n = net.n_pes
+        moved = jnp.moveaxis(x, scatter_axis, 0)
+        assert moved.shape[0] % n == 0, (moved.shape, n)
+        blk_shape = (moved.shape[0] // n,) + moved.shape[1:]
+        own, _ = coll.reduce_scatter(net, moved, op)
+        # ring RS leaves PE p holding block (p+1)%n; one rotation ships each
+        # block to its home PE so PE i holds block i (psum_scatter layout).
+        home = net.ppermute(own, [(p, (p + 1) % n) for p in range(n)])
+        blk = home.reshape(blk_shape)
+        return jnp.moveaxis(blk, 0, scatter_axis) if scatter_axis != 0 else blk
+
+    def alltoall(self, x, axis, *, split_axis: int = 0, concat_axis: int = 0):
+        if axis is None or axis == ():
+            return x
+        if self.backend == "xla":
+            return lax.all_to_all(x, axis, split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+        assert split_axis == concat_axis, "shmem alltoall is in-place ragged"
+        return coll.alltoall(self._net(axis), x, axis=split_axis)
+
+    def broadcast(self, x, axis, root: int = 0):
+        if self.backend == "xla":
+            # emulate with select + psum (XLA folds to a broadcast)
+            idx = lax.axis_index(axis)
+            masked = jax.tree.map(
+                lambda v: jnp.where(idx == root, v, jnp.zeros_like(v)), x)
+            return jax.tree.map(lambda v: lax.psum(v, axis), masked)
+        return coll.broadcast(self._net(axis), x, root)
+
+    def ppermute(self, x, axis, perm):
+        return lax.ppermute(x, axis, perm)
+
+    # -- gradient synchronization (hierarchical over pod x data) -------------
+    def grad_sync(self, grads, *, mean: bool = True):
+        """Average gradients over the data(+pod) axes.
+
+        shmem path: dissemination/ring allreduce per DESIGN; when a pod
+        axis exists, reduce within pods first (ICI), then across pods
+        (DCN) — fewest, largest messages on the slow links."""
+        axes = self.axes
+        dax = axes.data
+        scale_n = 1
+        for a in axes.grad_axes():
+            scale_n *= self.axis_size(a)
+        if self.backend == "xla":
+            out = jax.tree.map(lambda g: lax.psum(g, axes.grad_axes()), grads)
+        elif self.grad_rs:
+            # ZeRO-1 flavored: bandwidth-optimal ring reduce-scatter, then
+            # ring allgather — moves ~2x buffer instead of log2(N)x
+            def one(g):
+                net = self._net(dax)
+                own, info = coll.reduce_scatter(net, g, "sum")
+                out = coll._allgather_unpad(net, own, info)
+                if axes.pod is not None:
+                    out = self.allreduce(out, axes.pod)
+                return out
+            out = jax.tree.map(one, grads)
+        else:
+            out = self.allreduce(grads, dax)
+            if axes.pod is not None:
+                out = self.allreduce(out, axes.pod)
+        if mean:
+            out = jax.tree.map(lambda g: g / scale_n, out)
+        return out

@@ -1,0 +1,97 @@
+"""Pipeline parallelism over the pod axis (GPipe schedule on shmem puts).
+
+The physically honest mapping for multi-pod training: pipeline stages ==
+pods, so the slow DCN links carry only stage-boundary activations (one
+microbatch-sized put per tick) instead of gradient allreduces.  Layers
+are sharded over `pod` on their stacked dim; every stage runs the same
+shard_map code on its layer shard; microbatches flow stage-to-stage via
+`ppermute` (the paper's put).  Autodiff reverses the schedule, yielding
+the backward pipeline for free.
+
+Scope: homogeneous dense/audio/vlm stacks (uniform scanned layers).
+MoE/hybrid keep their EP/DP mappings (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models import layers as L
+from ..models import transformer
+from ..models.config import ModelConfig
+from .comm import Comm
+
+
+def supported(cfg: ModelConfig) -> bool:
+    return cfg.family in ("dense", "vlm", "audio") \
+        and not cfg.local_global_period
+
+
+def pipeline_train_loss(comm: Comm, cfg: ModelConfig, params, batch, *,
+                        pp_axis: str = "pod", n_micro: int | None = None):
+    """GPipe forward+loss: params["layers"] leaves carry L/P layers per
+    stage (sharded over pp_axis).  Returns token-mean loss (identical to
+    transformer.train_loss up to microbatch boundaries)."""
+    P = comm.axis_size(pp_axis)
+    stage = comm.axis_index(pp_axis)
+    tokens = batch.get("tokens")
+    frames = batch.get("frames")
+    targets = batch["targets"]
+    B = targets.shape[0]
+    n_micro = n_micro or max(P, 1)
+    assert B % n_micro == 0
+    mb = B // n_micro
+    seq = targets.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(seq)[None], (mb, seq))
+
+    def embed_micro(i):
+        sl = lambda a: lax.dynamic_slice_in_dim(a, i * mb, mb, 0)
+        if cfg.frontend == "audio":
+            return sl(frames).astype(cfg.dtype)
+        return transformer._embed_scaled(comm, cfg, params, sl(tokens))
+
+    def my_layers(x):
+        def step(x, bp):
+            x, _ = transformer._attn_block(comm, cfg, bp, x, positions)
+            return x, ()
+        step = transformer._maybe_remat(cfg, step)
+        x, _ = transformer._scan(cfg, step, x, params["layers"])
+        return x
+
+    fwd_perm = [(s, s + 1) for s in range(P - 1)]
+    zero = jnp.zeros((mb, seq, cfg.d_model), cfg.dtype)
+    n_ticks = n_micro + P - 1
+
+    def tick(carry, t):
+        x_in, loss_sum, tok_count = carry
+        # stage 0 injects microbatch t (zeros once drained)
+        inject = jnp.where(t < n_micro, 1, 0)
+        x0 = jax.tree.map(
+            lambda a, b: jnp.where((stage == 0) & (inject == 1), a, b),
+            embed_micro(jnp.clip(t, 0, n_micro - 1)), x_in)
+        y = my_layers(x0)
+        # last stage finalizes microbatch m = t - (P - 1)
+        m = t - (P - 1)
+        valid = (m >= 0) & (m < n_micro)
+        h = L.rms_norm(y, params["final_norm"])
+        logits = L.lm_logits(comm, cfg, params["embed"], h)
+        tgt = lax.dynamic_slice_in_dim(
+            targets, jnp.clip(m, 0, n_micro - 1) * mb, mb, 0)
+        tok_loss = L.sharded_xent(comm, cfg, logits, tgt)
+        is_last = stage == P - 1
+        contrib = jnp.where(valid & is_last, jnp.sum(tok_loss), 0.0)
+        cnt = jnp.where(valid & is_last, tok_loss.size, 0)
+        # ship activations to the next stage (the paper's put on DCN)
+        x_next = lax.ppermute(y, pp_axis, fwd_perm) if P > 1 else y
+        return (x_next, loss_sum + contrib, tok_count + cnt), ()
+
+    (x_fin, loss_sum, tok_count), _ = lax.scan(
+        tick, (zero, jnp.zeros(()), jnp.zeros((), jnp.int32)),
+        jnp.arange(n_ticks))
+    # loss lives on the last stage: share it (tree broadcast over pp)
+    total = comm.allreduce(loss_sum, pp_axis)
+    count = comm.allreduce(tok_count, pp_axis)
+    return total / jnp.maximum(count, 1)

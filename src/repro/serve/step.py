@@ -1,0 +1,41 @@
+"""Serve-step builders: batched prefill and single-token decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer
+from ..models.config import ModelConfig
+from ..parallel.comm import AxisSpec, Comm
+
+
+def build_prefill(cfg: ModelConfig, axes: AxisSpec, backend: str):
+    def fn(params, batch):
+        comm = Comm(axes, backend)
+        return transformer.prefill(
+            comm, cfg, params, batch.get("tokens"),
+            frames=batch.get("frames"),
+            frontend_embeds=batch.get("frontend_embeds"))
+    return fn
+
+
+def build_decode_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
+                      seq_shards: int = 1):
+    def fn(params, cache, batch):
+        comm = Comm(axes, backend)
+        return transformer.decode_step(
+            comm, cfg, params, cache, batch["tokens"], batch["positions"],
+            seq_shards=seq_shards)
+    return fn
+
+
+def sample_greedy(comm: Comm, logits):
+    """Greedy sampling over vocab-sharded logits: local argmax + global
+    max-reduce over the model axis."""
+    v_local = logits.shape[-1]
+    base = comm.axis_index(comm.axes.model) * v_local
+    loc_max = jnp.max(logits, -1)
+    loc_arg = jnp.argmax(logits, -1) + base
+    g_max = comm.allreduce(loc_max, comm.axes.model, "max")
+    winner = jnp.where(loc_max >= g_max, loc_arg, jnp.zeros_like(loc_arg))
+    return comm.allreduce(winner, comm.axes.model, "max")

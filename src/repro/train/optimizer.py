@@ -1,0 +1,98 @@
+"""AdamW in plain JAX, with optimizer-state compression.
+
+Distributed-optimization tricks (DESIGN.md §8):
+  * moment dtype f32 / bf16 / int8 — int8 moments use 128-element blockwise
+    absmax scales (the symmetric-heap alignment unit), cutting optimizer
+    HBM by 8x; required to fit deepseek-v3 on one pod.
+  * states inherit the parameter sharding (ZeRO follows fsdp for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "f32"      # f32 | bf16 | int8
+
+
+def _q_encode(x32, dtype: str, nonneg: bool = False):
+    if dtype == "f32":
+        return x32
+    if dtype == "bf16":
+        return x32.astype(jnp.bfloat16)
+    # int8 blockwise absmax; non-negative tensors (second moments) are
+    # stored in the sqrt domain, which linearizes their dynamic range
+    # (bitsandbytes-style), else sqrt(v) quantization error wrecks the
+    # AdamW denominator.
+    flat = x32.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    if nonneg:
+        fp = jnp.sqrt(jnp.maximum(fp, 0.0))
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    q = jnp.round(fp / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def _q_decode(s, dtype: str, shape=None, nonneg: bool = False):
+    if dtype == "f32":
+        return s
+    if dtype == "bf16":
+        return s.astype(jnp.float32)
+    flat = (s["q"].astype(jnp.float32) * s["scale"])
+    if nonneg:
+        flat = flat * flat
+    flat = flat.reshape(-1)
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].reshape(shape)
+
+
+def init_state(params, cfg: AdamWConfig):
+    def one(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return {"m": _q_encode(z, cfg.moment_dtype),
+                "v": _q_encode(z, cfg.moment_dtype, nonneg=True)}
+    return {"mv": jax.tree.map(one, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def one(p, g, mv):
+        g32 = g.astype(jnp.float32)
+        m = _q_decode(mv["m"], cfg.moment_dtype, p.shape)
+        v = _q_decode(mv["v"], cfg.moment_dtype, p.shape, nonneg=True)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        if p.ndim >= 2:
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype)
+        return new_p, {"m": _q_encode(m, cfg.moment_dtype),
+                       "v": _q_encode(v, cfg.moment_dtype, nonneg=True)}
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mv = treedef.flatten_up_to(state["mv"])
+    out = [one(p, g, mv) for p, g, mv in zip(flat_p, flat_g, flat_mv)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mv = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mv": new_mv, "step": step}

@@ -1,0 +1,91 @@
+"""Property tests for the symmetric heap (paper §3.2 rules)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.heap import (HeapError, SymmetricHeap, pack, plan_pack,
+                             unpack)
+
+
+def test_rule1_reverse_order_free():
+    h = SymmetricHeap(1024)
+    a = h.malloc(100)
+    b = h.malloc(100)
+    # freeing the first frees the series (paper: "call it once for the
+    # first allocated buffer in a series")
+    h.free(a)
+    assert h.brk == a.offset
+    with pytest.raises(HeapError):
+        h.free(b)          # already gone
+
+
+def test_rule2_realloc_last_only():
+    h = SymmetricHeap(1024)
+    a = h.malloc(64)
+    b = h.malloc(64)
+    with pytest.raises(HeapError):
+        h.realloc(a, 128)
+    b2 = h.realloc(b, 128)
+    assert b2.offset == b.offset       # no copy, grows in place
+    assert h.brk == b2.offset + 128
+
+
+def test_rule3_alignment():
+    h = SymmetricHeap(4096)
+    with pytest.raises(HeapError):
+        h.malloc(8, align=4)           # < 8
+    with pytest.raises(HeapError):
+        h.malloc(8, align=24)          # not a power of 2
+    for al in (8, 16, 64, 256):
+        a = h.malloc(13, align=al)
+        assert a.offset % al == 0
+
+
+def test_exhaustion():
+    h = SymmetricHeap(128)
+    h.malloc(100)
+    with pytest.raises(HeapError):
+        h.malloc(100)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=20))
+def test_brk_monotone_and_free_restores(sizes):
+    h = SymmetricHeap(1 << 20)
+    allocs = []
+    brks = [h.brk]
+    for s in sizes:
+        allocs.append(h.malloc(s))
+        assert h.brk >= brks[-1]
+        brks.append(h.brk)
+    # free in reverse: brk returns exactly
+    for a in reversed(allocs):
+        h.free(a)
+        assert h.brk == a.offset
+    assert h.brk == allocs[0].offset
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 5), st.integers(1, 7)),
+                min_size=1, max_size=6))
+def test_pack_unpack_roundtrip(shapes):
+    tree = {f"w{i}": jnp.asarray(
+        np.random.RandomState(i).randn(*s).astype(np.float32))
+        for i, s in enumerate(shapes)}
+    spec = plan_pack(tree)
+    out = unpack(pack(tree, spec), spec)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(tree[k]), rtol=1e-6)
+    # offsets lane-aligned (the TPU analogue of dword alignment)
+    assert all(o % 128 == 0 for o in spec.offsets)
+
+
+def test_pack_mixed_dtypes():
+    tree = [jnp.ones((3,), jnp.bfloat16), jnp.arange(4, dtype=jnp.int32)]
+    spec = plan_pack(tree, dtype=jnp.float32)
+    out = unpack(pack(tree, spec), spec)
+    assert out[0].dtype == jnp.bfloat16 and out[1].dtype == jnp.int32
+    np.testing.assert_allclose(np.asarray(out[1]), np.arange(4))

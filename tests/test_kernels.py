@@ -1,0 +1,138 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.RandomState(0)
+
+
+@pytest.mark.parametrize("shape", [(32, 128), (37, 300), (8, 128),
+                                   (100, 1), (1, 513)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_put_copy(shape, dtype):
+    x = jnp.asarray((RNG.randn(*shape) * 10).astype(dtype))
+    out = ops.put_copy(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dma_copy_2d_strided(dtype):
+    src = jnp.asarray(RNG.randn(64, 256).astype(dtype))
+    dst = jnp.asarray(RNG.randn(96, 384).astype(dtype))
+    kw = dict(src_origin=(32, 128), dst_origin=(0, 256), region=(32, 128))
+    np.testing.assert_allclose(
+        np.asarray(ops.dma_copy(src, dst, interpret=True, **kw)),
+        np.asarray(ref.dma_copy_ref(src, dst, **kw)))
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min", "prod"])
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_reduce_combine(op, k):
+    bufs = [jnp.asarray(RNG.rand(40, 200).astype(np.float32) + 0.1)
+            for _ in range(k)]
+    np.testing.assert_allclose(
+        np.asarray(ops.reduce_combine(bufs, op, interpret=True)),
+        np.asarray(ref.reduce_combine_ref(bufs, op)), rtol=1e-5)
+
+
+ATTN_CASES = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=17),
+    dict(causal=True, softcap=30.0),
+    dict(causal=True, window=33, softcap=50.0),
+]
+
+
+@pytest.mark.parametrize("kw", ATTN_CASES)
+@pytest.mark.parametrize("lq,lk,group", [(64, 64, 2), (100, 100, 1),
+                                         (32, 96, 4)])
+def test_flash_attention_vs_ref(kw, lq, lk, group):
+    if kw.get("causal") and lq != lk:
+        pytest.skip("causal assumes aligned positions")
+    B, Hkv, D = 2, 2, 32
+    q = jnp.asarray(RNG.randn(B, Hkv * group, lq, D).astype(np.float32)) * .5
+    k = jnp.asarray(RNG.randn(B, Hkv, lk, D).astype(np.float32)) * .5
+    v = jnp.asarray(RNG.randn(B, Hkv, lk, D).astype(np.float32)) * .5
+    out = ops.attention(q, k, v, use_pallas=True, interpret=True,
+                        bq=32, bk=32, **kw)
+    want = ref.attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    B, H, L, D = 1, 2, 64, 32
+    q = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)).astype(
+        jnp.bfloat16) * 0.5
+    k = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)).astype(
+        jnp.bfloat16) * 0.5
+    v = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)).astype(
+        jnp.bfloat16) * 0.5
+    out = ops.attention(q, k, v, use_pallas=True, interpret=True,
+                        bq=32, bk=32)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_attention_grad_matches_ref():
+    B, H, L, D = 1, 2, 48, 16
+    q = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    k = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    v = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    g1 = jax.grad(lambda a: ops.attention(
+        a, k, v, use_pallas=True, interpret=True, bq=16, bk=16).sum())(q)
+    g2 = jax.grad(lambda a: ref.attention_ref(a, k, v).sum())(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=3e-4)
+
+
+def test_blockwise_equals_dense():
+    B, H, L, D = 1, 2, 200, 16
+    q = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    k = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    v = jnp.asarray(RNG.randn(B, H, L, D).astype(np.float32)) * .5
+    for kw in ATTN_CASES:
+        a = ref.attention_blockwise(q, k, v, block=64, **kw)
+        b = ref.attention_ref(q, k, v, **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@pytest.mark.parametrize("L,chunk", [(64, 16), (64, 64), (48, 16)])
+@pytest.mark.parametrize("groups", [1, 2])
+def test_ssd_kernel_and_chunked_vs_scan(L, chunk, groups):
+    B, H, P, N = 2, 4, 16, 8
+    x = jnp.asarray(RNG.randn(B, L, H, P).astype(np.float32)) * .3
+    dt = jnp.asarray(RNG.rand(B, L, H).astype(np.float32)) * .5
+    a_log = -jnp.asarray(RNG.rand(H).astype(np.float32)) - .1
+    bm = jnp.asarray(RNG.randn(B, L, groups, N).astype(np.float32)) * .3
+    cm = jnp.asarray(RNG.randn(B, L, groups, N).astype(np.float32)) * .3
+    y0, h0 = ref.ssd_ref(x, dt, a_log, bm, cm)
+    y1, h1 = ops.ssd(x, dt, a_log, bm, cm, chunk=chunk, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), atol=2e-4)
+    if groups == 1 or H % groups == 0:
+        y2, h2 = ops.ssd(x, dt, a_log, bm, cm, chunk=chunk,
+                         use_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y2),
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h0), np.asarray(h2),
+                                   atol=2e-4)
+
+
+def test_ssd_with_initial_state():
+    B, L, H, P, N = 1, 32, 2, 8, 4
+    x = jnp.asarray(RNG.randn(B, L, H, P).astype(np.float32)) * .3
+    dt = jnp.asarray(RNG.rand(B, L, H).astype(np.float32)) * .5
+    a_log = -jnp.asarray(RNG.rand(H).astype(np.float32)) - .1
+    bm = jnp.asarray(RNG.randn(B, L, 1, N).astype(np.float32)) * .3
+    cm = jnp.asarray(RNG.randn(B, L, 1, N).astype(np.float32)) * .3
+    h0 = jnp.asarray(RNG.randn(B, H, P, N).astype(np.float32)) * .2
+    y0, hf0 = ref.ssd_ref(x, dt, a_log, bm, cm, h0)
+    y1, hf1 = ops.ssd(x, dt, a_log, bm, cm, h0, chunk=8, use_pallas=True,
+                      interpret=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf0), np.asarray(hf1), atol=2e-4)

@@ -1,0 +1,161 @@
+"""Per-arch smoke tests (reduced configs, 1x1 mesh): one train step with
+finite loss + shape checks, decode steps, decode-vs-forward consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, smoke_config
+from repro.launch import build
+from repro.launch.mesh import make_mesh
+from repro.models import transformer
+from repro.parallel.comm import AxisSpec, Comm
+from repro.serve import step as sstep
+from repro.train import optimizer as opt
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+def _batch(cfg, B=4, L=32):
+    if cfg.frontend == "audio":
+        return {"frames": jnp.ones((B, L, cfg.d_model), cfg.dtype),
+                "targets": jnp.ones((B, L), jnp.int32)}
+    b = {"tokens": jnp.ones((B, L), jnp.int32),
+         "targets": jnp.ones((B, L), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["frontend_embeds"] = jnp.ones(
+            (B, cfg.n_frontend_tokens, cfg.d_model), cfg.dtype)
+    return b
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch, mesh):
+    cfg = smoke_config(arch)
+    batch = _batch(cfg)
+    with jax.set_mesh(mesh):
+        init_fn, shapes, specs = build.make_init_fn(cfg, mesh)
+        params = jax.jit(init_fn)(jax.random.key(0))
+        wrap, _, (osh, ospecs), ocfg = build.make_train_step(cfg, mesh,
+                                                             "shmem")
+        ostate = jax.jit(build.shard_mapped(
+            lambda p: opt.init_state(p, ocfg), mesh, (specs,), ospecs)
+        )(params)
+        step = jax.jit(wrap(batch))
+        loss0, params, ostate = step(params, ostate, batch)
+        loss1, params, ostate = step(params, ostate, batch)
+    assert np.isfinite(float(loss0)) and np.isfinite(float(loss1)), arch
+    # same repeated batch: one AdamW step should not explode the loss
+    assert float(loss1) < float(loss0) * 1.5, (arch, loss0, loss1)
+    # output shapes: no NaNs anywhere in updated params
+    flat = jax.tree.leaves(params)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all()
+               for l in flat if l.dtype != jnp.int8), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_smoke(arch, mesh):
+    cfg = smoke_config(arch)
+    if cfg.is_encoder:
+        pytest.skip("encoder-only: no decode step (DESIGN.md §5)")
+    B, S = 2, 64
+    with jax.set_mesh(mesh):
+        init_fn, shapes, specs = build.make_init_fn(cfg, mesh)
+        params = jax.jit(init_fn)(jax.random.key(0))
+        cshapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, 1, B, S, 1))
+        cspecs = jax.tree.map(lambda _: P(), cshapes)
+        cache = jax.jit(build.shard_mapped(
+            lambda: transformer.init_cache(cfg, 1, B, S, 1),
+            mesh, (), cspecs))()
+        decode = sstep.build_decode_step(cfg, AxisSpec(), "shmem", 1)
+        djit = jax.jit(build.shard_mapped(
+            decode, mesh,
+            (specs, cspecs, {"tokens": P(), "positions": P()}),
+            (P(), cspecs)))
+        for t in range(3):
+            logits, cache = djit(params, cache,
+                                 {"tokens": jnp.ones((B, 1), jnp.int32),
+                                  "positions": jnp.full((B,), t, jnp.int32)})
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-2.7b",
+                                  "zamba2-1.2b", "gemma2-9b"])
+def test_decode_matches_forward(arch, mesh):
+    """Teacher-forced decode logits == full forward logits at each step —
+    validates KV/SSM cache handling exactly."""
+    cfg = smoke_config(arch)
+    B, T = 2, 12
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab, size=(B, T)).astype(np.int32)
+    with jax.set_mesh(mesh):
+        init_fn, shapes, specs = build.make_init_fn(cfg, mesh)
+        params = jax.jit(init_fn)(jax.random.key(1))
+
+        comm_args = (AxisSpec(), "shmem")
+
+        def fwd(p, tokens):
+            comm = Comm(*comm_args)
+            h, _ = transformer.forward(comm, cfg, p, tokens)
+            from repro.models import layers as L
+            return L.lm_logits(comm, cfg, p["embed"], h)
+        full = jax.jit(build.shard_mapped(
+            fwd, mesh, (specs, P()), P()))(params, jnp.asarray(toks))
+
+        S = 16
+        cshapes = jax.eval_shape(
+            lambda: transformer.init_cache(cfg, 1, B, S, 1))
+        cspecs = jax.tree.map(lambda _: P(), cshapes)
+        cache = jax.jit(build.shard_mapped(
+            lambda: transformer.init_cache(cfg, 1, B, S, 1),
+            mesh, (), cspecs))()
+        decode = sstep.build_decode_step(cfg, AxisSpec(), "shmem", 1)
+        djit = jax.jit(build.shard_mapped(
+            decode, mesh,
+            (specs, cspecs, {"tokens": P(), "positions": P()}),
+            (P(), cspecs)))
+        errs = []
+        for t in range(T):
+            logits, cache = djit(
+                params, cache,
+                {"tokens": jnp.asarray(toks[:, t:t + 1]),
+                 "positions": jnp.full((B,), t, jnp.int32)})
+            errs.append(np.abs(np.asarray(logits[:, 0], np.float32)
+                               - np.asarray(full[:, t], np.float32)).max())
+    assert max(errs) < 0.12, (arch, errs)  # bf16 activations: chunked-SSD vs single-step recurrence rounding
+
+
+def test_moe_router_load_balance_aux():
+    cfg = smoke_config("granite-moe-3b-a800m")
+    mesh = make_mesh(1, 1)
+    with jax.set_mesh(mesh):
+        init_fn, shapes, specs = build.make_init_fn(cfg, mesh)
+        params = jax.jit(init_fn)(jax.random.key(0))
+
+        def fwd(p, tokens):
+            comm = Comm(AxisSpec(), "shmem")
+            _, aux = transformer.forward(comm, cfg, p, tokens)
+            return aux
+        aux = jax.jit(build.shard_mapped(fwd, mesh, (specs, P()), P()))(
+            params, jnp.ones((2, 16), jnp.int32))
+    # balanced-uniform router gives aux ~= n_experts * E[me*ce] ~= 1
+    assert 0.2 < float(aux) / cfg.n_layers < 5.0
+
+
+def test_param_count_sanity():
+    """param_count() should be within 20% of actual init sizes."""
+    for arch in ["qwen2-0.5b", "gemma2-9b", "granite-moe-3b-a800m"]:
+        cfg = smoke_config(arch)
+        shapes = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg, 1, 1),
+            jax.random.key(0))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        est = cfg.param_count()
+        assert 0.6 < est / actual < 1.6, (arch, est, actual)

@@ -1,0 +1,145 @@
+"""OpenSHMEM API surface tests (sim backend): RMA incl. strided (§4
+extension), non-blocking + quiet/fence, TESTSET-derived atomics, locks,
+critical sections, shmem_ptr."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sim_ctx
+from repro.core.topology import epiphany3
+
+N = 8
+
+
+@pytest.fixture
+def ctx():
+    return sim_ctx(N, epiphany3())
+
+
+def _x(w=6, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(N, w)
+                       .astype(np.float32))
+
+
+def test_put_merges_with_local(ctx):
+    x = _x()
+    out = ctx.put(x, [(0, 3)])
+    ref = np.asarray(x).copy()
+    ref[3] = ref[0]
+    np.testing.assert_allclose(np.asarray(out), ref)
+
+
+def test_get_is_owner_pushed(ctx):
+    x = _x()
+    out = ctx.get(x, [(2, 7)])     # requester 2 reads from owner 7
+    ref = np.asarray(x).copy()
+    ref[2] = ref[7]
+    np.testing.assert_allclose(np.asarray(out), ref)
+
+
+def test_iput_strided(ctx):
+    x = jnp.asarray(np.arange(N * 8, dtype=np.float32).reshape(N, 8))
+    # every 2nd element of src 0 into every 2nd slot of dst 1 (4 elems)
+    out = ctx.iput(x, [(0, 1)], sst=2, dst=2, nelems=4)
+    ref = np.asarray(x).copy()
+    ref[1, 0:8:2] = ref[0, 0:8:2]
+    np.testing.assert_allclose(np.asarray(out), ref)
+
+
+def test_iget_strided(ctx):
+    x = jnp.asarray(np.arange(N * 4, dtype=np.float32).reshape(N, 4))
+    out = ctx.iget(x, [(5, 2)], sst=1, dst=1, nelems=4)
+    ref = np.asarray(x).copy()
+    ref[5] = ref[2]
+    np.testing.assert_allclose(np.asarray(out), ref)
+
+
+def test_nbi_and_quiet(ctx):
+    x = _x()
+    f1 = ctx.put_nbi(x, [(0, 1)])
+    f2 = ctx.get_nbi(x, [(2, 3)])
+    vals = ctx.quiet()
+    assert f1._done and f2._done
+    ref1 = np.asarray(x).copy(); ref1[1] = ref1[0]
+    np.testing.assert_allclose(np.asarray(f1.value), ref1)
+    assert len(vals) == 2
+    assert not ctx._pending
+
+
+def test_fence_noop_when_empty(ctx):
+    assert ctx.fence() == ()
+
+
+def test_testset_semantics(ctx):
+    var = jnp.asarray(np.array([0, 5, 0, 1] * 2, np.int32))
+    old, new = ctx.testset(var, jnp.full((N,), 9, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(var))
+    np.testing.assert_array_equal(
+        np.asarray(new), np.where(np.asarray(var) == 0, 9, np.asarray(var)))
+
+
+def test_atomic_swap_and_cswap(ctx):
+    var = jnp.arange(N, dtype=jnp.int32) * 10
+    val = jnp.full((N,), 7, jnp.int32)
+    ring = [(i, (i + 1) % N) for i in range(N)]
+    fetched, new = ctx.atomic_swap(var, val, ring)
+    # every PE's var replaced by its ring predecessor's 7
+    np.testing.assert_array_equal(np.asarray(new), 7)
+    np.testing.assert_array_equal(
+        np.asarray(fetched),
+        np.roll(np.asarray(var), -1))   # requester i fetched var[i+1]
+    # compare value comes from the REQUESTER (PE 0): var[1]=10 == cond[0]=10
+    cond = jnp.asarray(np.where(np.arange(N) % 2 == 0, 10, -1)
+                       .astype(np.int32))
+    f2, n2 = ctx.atomic_compare_swap(var, cond, val, [(0, 1)])
+    ref = np.asarray(var).copy()
+    ref[1] = 7                      # swap fires
+    np.testing.assert_array_equal(np.asarray(n2), ref)
+    # and a non-matching compare leaves the target untouched
+    f3, n3 = ctx.atomic_compare_swap(var, cond - 1, val, [(0, 1)])
+    np.testing.assert_array_equal(np.asarray(n3), np.asarray(var))
+
+
+def test_lock_arbitration_deterministic(ctx):
+    lock = jnp.zeros((N,), jnp.int32)
+    want = jnp.asarray(np.array([0, 1, 1, 0, 1, 0, 0, 0], bool))
+    granted, new = ctx.set_lock(lock, want)
+    g = np.asarray(granted)
+    assert g[1] and not g[2] and not g[4]    # lowest wanting PE wins
+    assert np.all(np.asarray(new) == 2)      # holder id = pe+1
+    # holder releases; others re-contend
+    cleared = ctx.clear_lock(new, jnp.ones((N,), bool))
+    assert np.all(np.asarray(cleared) == 0)
+    g2, new2 = ctx.set_lock(cleared, want & ~jnp.asarray(g))
+    assert np.asarray(g2)[2]
+
+
+def test_test_lock_fails_when_held(ctx):
+    lock = jnp.full((N,), 3, jnp.int32)    # held by PE 2
+    granted, new = ctx.test_lock(lock, jnp.ones((N,), bool))
+    assert not np.asarray(granted).any()
+    np.testing.assert_array_equal(np.asarray(new), 3)
+
+
+def test_critical_section_serializes(ctx):
+    # each PE appends its id: the result must reflect rank order
+    state = jnp.zeros((N, N), jnp.float32)
+
+    def fn(s):
+        pe = ctx.my_pe()
+        cnt = jnp.sum(s > 0, axis=-1)
+        return s + 0 * pe[..., None] if s.ndim == 1 else s
+
+    out = ctx.critical(jnp.zeros((N,), jnp.float32), lambda s: s + 1)
+    assert np.all(np.asarray(out) == N)
+
+
+def test_ptr(ctx):
+    assert ctx.ptr(19, 128) == (19 % N, 128)
+
+
+def test_barrier_all_wand_vs_dissemination(ctx):
+    t1 = ctx.barrier_all()
+    t2 = ctx.barrier()
+    assert t1.shape[0] == N and t2.shape[0] == N

@@ -1,0 +1,91 @@
+"""SPMD (shard_map/ppermute) == SIM backend, and shmem == XLA substrate.
+
+Runs in a subprocess with XLA_FLAGS=8 host devices so the main test
+process keeps its single-device view (per the dry-run isolation rule).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import spmd_ctx, sim_ctx
+
+    n = 8
+    mesh = jax.make_mesh((n,), ("pe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    x = jnp.asarray(np.random.RandomState(0).randn(n, 6).astype(np.float32))
+
+    def check(fn_name, *args, **kw):
+        def body(xl):
+            ctx = spmd_ctx("pe")
+            return getattr(ctx, fn_name)(xl[0], *args, **kw)[None]
+        out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("pe"),),
+                                    out_specs=P("pe")))(x)
+        ref = getattr(sim_ctx(n), fn_name)(x, *args, **kw)
+        assert np.allclose(np.asarray(out), np.asarray(ref), rtol=1e-5), \\
+            fn_name
+
+    check("broadcast", 3)
+    check("broadcast", 5)
+    check("fcollect")
+    check("collect")
+    check("to_all", "sum")
+    check("to_all", "max")
+    check("to_all", "sum", algorithm="ring")
+
+    x2 = jnp.asarray(np.random.RandomState(2).randn(n, n * 2)
+                     .astype(np.float32))
+    def body_a2a(xl):
+        return spmd_ctx("pe").alltoall(xl[0])[None]
+    out = jax.jit(jax.shard_map(body_a2a, mesh=mesh, in_specs=(P("pe"),),
+                                out_specs=P("pe")))(x2)
+    ref = sim_ctx(n).alltoall(x2)
+    assert np.allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+    # shmem vs xla substrate equivalence through the Comm layer
+    from repro.parallel.comm import AxisSpec, Comm
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    y = jnp.asarray(np.random.RandomState(1).randn(8, 4).astype(np.float32))
+
+    def run(backend):
+        def body(v):
+            comm = Comm(AxisSpec(), backend)
+            a = comm.allreduce(v, "model")
+            b = comm.allgather(v, "model", concat_axis=0)
+            c = comm.reduce_scatter(b, "model", scatter_axis=0)
+            d = comm.alltoall(b, "model", split_axis=0, concat_axis=0)
+            e = comm.broadcast(v, "model", root=2)
+            f = comm.grad_sync(v)
+            return a, b, c, d, e, f
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh2,
+            in_specs=(P(("data", "model")),),
+            out_specs=(P("data"), P("data"), P(("data", "model")),
+                       P(("data", "model")), P("data"),
+                       P(("data", "model"))),
+            check_vma=False))(y)
+
+    outs_s = run("shmem")
+    outs_x = run("xla")
+    for i, (a, b) in enumerate(zip(outs_s, outs_x)):
+        assert np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5), i
+    print("SPMD-EQUIV-OK")
+""")
+
+
+def test_spmd_equivalence_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SPMD-EQUIV-OK" in r.stdout

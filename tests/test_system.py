@@ -1,0 +1,207 @@
+"""End-to-end system tests: the train launcher improves loss and resumes
+from checkpoints; the serve launcher generates; TP=2 sharded execution
+matches single-device execution numerically."""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+
+def test_train_launcher_loss_improves():
+    from repro.launch import train as train_mod
+    losses = train_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "12",
+        "--data", "1", "--model", "1", "--seq-len", "64", "--batch", "8",
+        "--lr", "1e-3"])
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
+
+
+def test_train_checkpoint_resume():
+    from repro.launch import train as train_mod
+    with tempfile.TemporaryDirectory() as d:
+        train_mod.main([
+            "--arch", "qwen2-0.5b", "--smoke", "--steps", "4",
+            "--data", "1", "--model", "1", "--seq-len", "32",
+            "--batch", "4", "--ckpt-dir", d, "--ckpt-every", "2"])
+        # resume continues from the saved step
+        losses = train_mod.main([
+            "--arch", "qwen2-0.5b", "--smoke", "--steps", "6",
+            "--data", "1", "--model", "1", "--seq-len", "32",
+            "--batch", "4", "--ckpt-dir", d, "--resume", "auto",
+            "--ckpt-every", "2"])
+        assert len(losses) == 2   # steps 4..5 only
+
+
+def test_serve_launcher_generates():
+    from repro.launch import serve as serve_mod
+    gen = serve_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--batch", "2",
+        "--prompt-len", "8", "--tokens", "6", "--cache-len", "32"])
+    assert gen.shape == (2, 6)
+    assert (gen >= 0).all() and (gen < 151936).all()
+
+
+TP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import smoke_config
+    from repro.launch import build
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer
+    from repro.parallel.comm import AxisSpec, Comm
+
+    def loss_1x1(arch, batch_np):
+        cfg = smoke_config(arch)
+        mesh = make_mesh(1, 1)
+        with jax.set_mesh(mesh):
+            init_fn, shapes, specs = build.make_init_fn(cfg, mesh)
+            params = jax.jit(init_fn)(jax.random.key(7))
+            def fn(p, b):
+                comm = Comm(AxisSpec(), "shmem")
+                l = transformer.train_loss(comm, cfg, p, b)
+                return comm.allreduce(l, "data") / comm.axis_size("data")
+            bspec = {k: P("data", *([None] * (v.ndim - 1)))
+                     for k, v in batch_np.items()}
+            loss = jax.jit(build.shard_mapped(
+                fn, mesh, (specs, bspec), P()))(
+                params, jax.tree.map(jnp.asarray, batch_np))
+            return float(loss), jax.tree.map(np.asarray, params)
+
+    rng = np.random.default_rng(0)
+    for arch in ["qwen2-0.5b", "granite-moe-3b-a800m", "mamba2-2.7b",
+                 "zamba2-1.2b", "gemma2-9b"]:
+        cfg = smoke_config(arch)
+        batch = {"tokens": rng.integers(
+                     1, cfg.vocab, size=(4, 16)).astype(np.int32),
+                 "targets": rng.integers(
+                     1, cfg.vocab, size=(4, 16)).astype(np.int32)}
+        l1, gp1 = loss_1x1(arch, batch)
+        # sharded run with the SAME global params, re-laid-out
+        mesh = make_mesh(2, 2)
+        with jax.set_mesh(mesh):
+            shapes, specs = build.abstract_params(cfg, mesh)
+            def fn(p, b):
+                comm = Comm(AxisSpec(), "shmem")
+                l = transformer.train_loss(comm, cfg, p, b)
+                return comm.allreduce(l, "data") / comm.axis_size("data")
+            bspec = {k: P("data", *([None] * (v.ndim - 1)))
+                     for k, v in batch.items()}
+            gshapes = build.global_shape(shapes, specs, mesh)
+            def fit(a, t):
+                a = np.asarray(a)
+                for ax in range(a.ndim):
+                    s_have, s_want = a.shape[ax], t.shape[ax]
+                    if s_have == s_want: continue
+                    if s_have < s_want:
+                        reps = [1]*a.ndim; reps[ax] = -(-s_want//s_have)
+                        a = np.tile(a, reps)
+                    a = np.take(a, range(s_want), axis=ax)
+                return a
+            def remap_mamba(kp, a, t):
+                # mamba fused in-proj / conv columns are per-shard
+                # [z_s, x_s, B, C, dt_s]; rebuild the tp=2 global layout
+                # from the tp=1 (G=1 global) params so semantics match.
+                name = str(getattr(kp[-1], "key", kp[-1]))
+                if not any(str(getattr(k, "key", k)) == "mamba"
+                           for k in kp):
+                    return fit(a, t)
+                ss = cfg.ssm
+                d_in = ss.expand * cfg.d_model
+                gdim = ss.n_groups * ss.state
+                nh = d_in // ss.head_dim
+                tp = 2
+                a = np.asarray(a)
+                def split_cols(mat, axis):
+                    z = np.split(mat.take(range(0, d_in), axis), tp, axis)
+                    x = np.split(mat.take(range(d_in, 2*d_in), axis),
+                                 tp, axis)
+                    bc = mat.take(range(2*d_in, 2*d_in+2*gdim), axis)
+                    dt = np.split(mat.take(
+                        range(2*d_in+2*gdim, 2*d_in+2*gdim+nh), axis),
+                        tp, axis)
+                    return np.concatenate(
+                        [np.concatenate([z[i], x[i], bc, dt[i]], axis)
+                         for i in range(tp)], axis)
+                def split_conv(mat, axis):
+                    x = np.split(mat.take(range(0, d_in), axis), tp, axis)
+                    bc = mat.take(range(d_in, d_in+2*gdim), axis)
+                    return np.concatenate(
+                        [np.concatenate([x[i], bc], axis)
+                         for i in range(tp)], axis)
+                # leading stacked-layer dim present on all these leaves
+                if name == "w_in":
+                    return split_cols(a, 2)
+                if name in ("conv_w", "conv_b"):
+                    return split_conv(a, a.ndim - 1)
+                return fit(a, t)   # head-blocked leaves split evenly
+            gp = jax.tree_util.tree_map_with_path(remap_mamba, gp1,
+                                                  gshapes)
+            gp = jax.tree.map(lambda a, sp: jax.device_put(
+                jnp.asarray(a), NamedSharding(mesh, sp)), gp, specs)
+            l2 = float(jax.jit(build.shard_mapped(
+                fn, mesh, (specs, bspec), P()))(
+                gp, jax.tree.map(jnp.asarray, batch)))
+        ok = abs(l1 - l2) < 0.05 * max(1.0, abs(l1))
+        print(f"{arch}: 1x1={l1:.4f} 2x2={l2:.4f}"
+              f" {'OK' if ok else 'MISMATCH'}")
+        assert ok, (arch, l1, l2)
+    print("TP-EQUIV-OK")
+""")
+
+
+def test_tp2_matches_single_device():
+    """Same global params, same batch: loss on a 2x2 (data x model) mesh
+    must match the 1x1 result — validates manual TP + ghost heads + MoE
+    padding + vocab-sharded loss numerics under real sharding.
+
+    Archs whose 1x1 vs 2x2 global param shapes differ only by TP padding
+    (ghost heads / padded experts) are tile-extended; the extended slots
+    are masked to zero effect by construction, so losses must agree."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", TP_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "TP-EQUIV-OK" in r.stdout
+
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, numpy as np
+    from repro.launch import train as train_mod
+
+    d = tempfile.mkdtemp()
+    # phase 1: train on a (data=2, model=2) mesh, checkpoint
+    train_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "4",
+        "--data", "2", "--model", "2", "--seq-len", "32", "--batch", "4",
+        "--ckpt-dir", d, "--ckpt-every", "2"])
+    # phase 2 (elastic shrink after 'node loss'): resume on (1, 2)
+    losses = train_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "6",
+        "--data", "1", "--model", "2", "--seq-len", "32", "--batch", "4",
+        "--ckpt-dir", d, "--resume", "auto", "--ckpt-every", "100"])
+    assert len(losses) == 2 and np.isfinite(losses).all(), losses
+    print("ELASTIC-OK")
+""")
+
+
+def test_elastic_shrink_resume():
+    """Node loss: checkpoint from a 2x2 mesh restores onto 1x2 — global
+    arrays re-shard under the new mesh (ckpt/manager.restore)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "ELASTIC-OK" in r.stdout

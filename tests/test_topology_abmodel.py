@@ -1,0 +1,70 @@
+"""Topology hop metrics + alpha-beta fit recovery."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abmodel
+from repro.core.topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
+
+
+def test_epiphany_dimensions():
+    t = epiphany3()
+    assert t.n_pes == 16
+    assert t.hops(0, 15) == 6          # (0,0)->(3,3) no wrap
+    assert t.max_hops() == 6
+
+
+def test_torus_wraparound():
+    t = v5e_pod()
+    assert t.n_pes == 256
+    # (0,0) -> (15,15): one hop each way around the torus
+    assert t.hops(0, t.rank((15, 15))) == 2
+    assert t.hops(0, t.rank((8, 8))) == 16   # antipode
+
+
+def test_multipod_dcn_weighting():
+    t = v5e_multipod(2)
+    same_pod = t.hops(t.rank((0, 0, 0)), t.rank((0, 0, 1)))
+    cross_pod = t.hops(t.rank((0, 0, 0)), t.rank((1, 0, 0)))
+    assert cross_pod == 10.0 * same_pod   # DCN hop ~10x ICI
+
+
+def test_coords_rank_roundtrip():
+    t = MeshTopology(shape=(3, 5, 7))
+    for pe in (0, 1, 52, 104):
+        assert t.rank(t.coords(pe)) == pe
+
+
+def test_farthest_first_order():
+    t = epiphany3()
+    order = t.farthest_first(0, range(16))
+    dists = [t.hops(0, p) for p in order]
+    assert dists == sorted(dists, reverse=True)
+    assert order[-1] == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(1e-7, 1e-4), st.floats(1e-12, 1e-8))
+def test_ab_fit_recovers_parameters(alpha, beta):
+    sizes = np.array([8 << i for i in range(10)], float)
+    times = alpha + beta * sizes
+    fit = abmodel.fit(sizes, times)
+    assert abs(fit.alpha - alpha) <= 1e-3 * alpha + 1e-12
+    assert abs(fit.beta - beta) <= 1e-3 * beta + 1e-20
+    assert fit.alpha_std < 1e-6 and fit.beta_std < 1e-9
+
+
+def test_link_models_sane():
+    # put peak on the paper's NoC == 2.4 GB/s; get path ~10x slower
+    big = 1 << 20
+    t_put = abmodel.EPIPHANY_NOC.time(big)
+    t_get = abmodel.EPIPHANY_NOC_GET.time(big)
+    assert 9 < t_get / t_put < 11
+    assert abs(big / t_put - 2.4e9) / 2.4e9 < 0.01
+
+
+def test_modeled_collective_time_additive():
+    stages = [(100.0, 1.0), (200.0, 2.0)]
+    total = abmodel.modeled_collective_time(stages)
+    assert total == pytest.approx(
+        abmodel.ICI_V5E.time(100.0, 1.0) + abmodel.ICI_V5E.time(200.0, 2.0))

@@ -1,0 +1,168 @@
+"""Training-infrastructure tests: optimizer (incl. int8 moments),
+checkpoint/restart/elastic, data pipeline determinism, fused grad sync."""
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import manager as ckpt
+from repro.data.pipeline import SyntheticLM
+from repro.train import optimizer as opt
+
+
+def _ref_adamw(p, g, m, v, t, c):
+    m = c.b1 * m + (1 - c.b1) * g
+    v = c.b2 * v + (1 - c.b2) * g * g
+    mh = m / (1 - c.b1 ** t)
+    vh = v / (1 - c.b2 ** t)
+    upd = mh / (np.sqrt(vh) + c.eps)
+    if p.ndim >= 2:
+        upd = upd + c.weight_decay * p
+    return p - c.lr * upd, m, v
+
+
+def test_adamw_f32_matches_reference():
+    c = opt.AdamWConfig()
+    rng = np.random.default_rng(0)
+    p0 = rng.standard_normal((8, 16)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = opt.init_state(params, c)
+    m = np.zeros_like(p0)
+    v = np.zeros_like(p0)
+    pr = p0.copy()
+    for t in range(1, 4):
+        g = rng.standard_normal(p0.shape).astype(np.float32)
+        params, state = opt.apply_updates(params, {"w": jnp.asarray(g)},
+                                          state, c)
+        pr, m, v = _ref_adamw(pr, g, m, v, t, c)
+        np.testing.assert_allclose(np.asarray(params["w"]), pr, rtol=2e-5,
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_quantized_moments_track_f32(dtype):
+    cq = opt.AdamWConfig(moment_dtype=dtype)
+    cf = opt.AdamWConfig(moment_dtype="f32")
+    rng = np.random.default_rng(1)
+    p0 = rng.standard_normal((16, 160)).astype(np.float32)
+    pq = {"w": jnp.asarray(p0)}
+    pf = {"w": jnp.asarray(p0)}
+    sq = opt.init_state(pq, cq)
+    sf = opt.init_state(pf, cf)
+    for t in range(5):
+        g = rng.standard_normal(p0.shape).astype(np.float32) * 0.1
+        pq, sq = opt.apply_updates(pq, {"w": jnp.asarray(g)}, sq, cq)
+        pf, sf = opt.apply_updates(pf, {"w": jnp.asarray(g)}, sf, cf)
+    rel = (np.abs(np.asarray(pq["w"]) - np.asarray(pf["w"])).max()
+           / (np.abs(np.asarray(pf["w"]) - p0).max() + 1e-9))
+    # quantized moments stay within a few percent of the f32 trajectory
+    assert rel < (0.02 if dtype == "bf16" else 0.10), rel
+
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(2)
+    x = rng.standard_normal((1000,)).astype(np.float32)
+    enc = opt._q_encode(jnp.asarray(x), "int8")
+    dec = np.asarray(opt._q_decode(enc, "int8", (1000,)))
+    blk = np.abs(x).reshape(-1, 125 if False else 1)  # per-128 blocks
+    err = np.abs(dec - x)
+    scale = np.abs(x).max()
+    assert err.max() <= scale / 127.0 * 1.01 + 1e-7
+
+
+def test_checkpoint_save_restore_atomic():
+    with tempfile.TemporaryDirectory() as d:
+        state = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+                 "opt": {"step": jnp.asarray(7)}}
+        ckpt.save(d, 7, state)
+        assert ckpt.latest_step(d) == 7
+        step, restored = ckpt.restore(d, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+        assert step == 7
+        np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                                   np.arange(12.0).reshape(3, 4))
+        # second save supersedes; LATEST flips atomically
+        ckpt.save(d, 9, state)
+        assert ckpt.latest_step(d) == 9
+
+
+def test_checkpoint_elastic_reshard():
+    """Shrinking the data axis (node loss): restore() reshapes into the
+    new global template."""
+    with tempfile.TemporaryDirectory() as d:
+        state = {"w": jnp.asarray(np.arange(32, dtype=np.float32)
+                                  .reshape(8, 4))}
+        ckpt.save(d, 1, state)
+        tgt = {"w": jax.ShapeDtypeStruct((4, 4), jnp.float32)}
+        _, restored = ckpt.restore(d, tgt)
+        assert restored["w"].shape == (4, 4)
+
+
+def test_fault_tolerance_manager():
+    with tempfile.TemporaryDirectory() as d:
+        ft = ckpt.FaultToleranceManager(d, save_every=2, async_save=False,
+                                        step_deadline_s=1e-9)
+        state = {"w": jnp.ones((2, 2))}
+        for s in range(5):
+            ft.on_step(s, lambda: state)
+        ft.finalize(5, lambda: state)
+        assert ckpt.latest_step(d) == 5
+        assert len(ft.stragglers) >= 1   # deadline was epsilon: all stall
+
+
+def test_pipeline_deterministic_and_sharded():
+    p = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=3)
+    a = p.batch(5)
+    b = p.batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = p.batch(6)
+    assert (a["tokens"] != c["tokens"]).any()
+    assert a["tokens"].min() >= 1 and a["tokens"].max() < 100
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["targets"][:, :-1])
+
+
+def test_pipeline_prefetch_iterator():
+    p = SyntheticLM(vocab=50, seq_len=8, global_batch=2, seed=0)
+    it = p.iterate(start_step=3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p.batch(3)["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3))
+def test_fused_grad_sync_equals_unfused(nleaves, seed):
+    """Heap-fused bucketed allreduce == per-tensor allreduce (sim via
+    1-PE comm is identity; structural equivalence checked on trees)."""
+    from repro.train.step import fused_grad_sync
+    from repro.parallel.comm import AxisSpec, Comm
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+
+    rng = np.random.default_rng(seed)
+    grads = {f"g{i}": jnp.asarray(
+        rng.standard_normal((3, 5)).astype(np.float32))
+        for i in range(nleaves)}
+    mask = {k: True for k in grads}
+    mesh = make_mesh(1, 1)
+
+    def run(fuse):
+        def body(g):
+            comm = Comm(AxisSpec(), "shmem")
+            return fused_grad_sync(comm, g, mask, fuse=fuse)
+        spec = jax.tree.map(lambda _: P(), grads)
+        with jax.set_mesh(mesh):
+            return jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                check_vma=False))(grads)
+
+    a = run(True)
+    b = run(False)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   rtol=1e-6)

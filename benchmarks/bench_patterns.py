@@ -1,0 +1,165 @@
+"""Predicted-vs-measured stage costs for the compiled CommPattern layer.
+
+Every collective now executes a :class:`repro.core.pattern.Schedule` of
+compiled patterns, and prices itself from the SAME object
+(``schedule.cost(topo)``).  This bench closes the loop:
+
+  1. Per-stage: run each schedule's stages as bare ppermutes on the SIM
+     backend, fit an alpha-beta model (eq. 1) to the measured
+     (bytes, time) samples, and report the fit the same way the paper's
+     figure subtitles do.
+  2. Per-collective: compare the fitted-model prediction built from the
+     schedule's own (bytes, hops) descriptors against the measured wall
+     time of the full collective, and the paper-constant (Epiphany NoC)
+     prediction alongside.
+  3. Selector check: report where `choose_algorithm` places the rd/ring
+     cross-over on each topology and verify the measured times agree on
+     which side of it the endpoints fall.
+
+SIM wall-clock is CPU time for the simulated chip, NOT Epiphany/TPU time —
+the point is that the *shape* of the cost model (per-stage additivity,
+payload scaling, stage counts) matches what actually executes.
+
+  PYTHONPATH=src python -m benchmarks.bench_patterns
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abmodel, collectives as coll, sim_ctx
+from repro.core.netops import SimNetOps
+from repro.core.topology import epiphany3
+
+TOPO = epiphany3()
+N = TOPO.n_pes
+LINK = abmodel.EPIPHANY_NOC
+ROWS: list[tuple] = []
+
+
+def _time(fn, *args, warmup=2, iters=8):
+    jitted = jax.jit(fn)
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(jitted(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters  # seconds
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _sized(nbytes, n=N):
+    w = max(1, int(nbytes) // 4)
+    return jnp.asarray(np.random.RandomState(0).randn(n, w)
+                       .astype(np.float32))
+
+
+# -- 1. fit the SIM substrate's own alpha-beta from single stages ------------
+
+def fit_sim_link() -> abmodel.ABFit:
+    """Measure one ring-pattern ppermute per size; fit T = alpha + beta*L.
+    This is the substrate's empirical LinkModel — the paper's Fig. 3
+    methodology applied to our simulator."""
+    net = SimNetOps(N)
+    sched = coll.fcollect_schedule(N, 0.0, "ring")
+    pattern = sched.stages[0].pattern
+    sizes = [64, 256, 1024, 4096, 16384, 65536]
+    times = []
+    for s in sizes:
+        x = _sized(s)
+        times.append(_time(lambda v: net.ppermute(v, pattern), x))
+    fit = abmodel.fit(sizes, times)
+    row("sim_stage_alpha_us", fit.alpha * 1e6,
+        f"beta^-1={fit.inv_beta / 1e9:.2f}GB/s "
+        f"(+-{fit.alpha_std * 1e6:.2f}us)")
+    return fit
+
+
+# -- 2. predicted vs measured per collective schedule ------------------------
+
+def bench_schedules(fit: abmodel.ABFit):
+    sim_link = abmodel.LinkModel(alpha_s=max(fit.alpha, 1e-9), hop_s=0.0,
+                                 bw_Bps=max(fit.inv_beta, 1.0))
+    cases = []
+    for s in (256, 4096, 65536):
+        cases.append((f"broadcast_{s}B", coll.broadcast_schedule(N, s),
+                      lambda c, v: c.broadcast(v, 0), _sized(s)))
+        cases.append((f"allreduce_rd_{s}B",
+                      coll.allreduce_schedule(N, s, "rd"),
+                      lambda c, v: c.to_all(v, "sum", algorithm="rd"),
+                      _sized(s)))
+        cases.append((f"allreduce_ring_{s}B",
+                      coll.allreduce_schedule(N, s, "ring"),
+                      lambda c, v: c.to_all(v, "sum", algorithm="ring"),
+                      _sized(s)))
+        cases.append((f"fcollect_rd_{s}B", coll.fcollect_schedule(N, s, "rd"),
+                      lambda c, v: c.fcollect(v, algorithm="rd"), _sized(s)))
+        cases.append((f"alltoall_{s}B", coll.alltoall_schedule(N, s * N),
+                      lambda c, v: c.alltoall(v), _sized(s * N)))
+
+    ctx = sim_ctx(N, TOPO)
+    print("\nname,measured_us,predicted(fit)/paper-model/stages")
+    for name, sched, run, x in cases:
+        measured = _time(lambda v, _run=run: _run(ctx, v), x)
+        pred_fit = sched.time(None, sim_link)
+        pred_noc = sched.time(TOPO, LINK)
+        ratio = measured / pred_fit if pred_fit > 0 else float("inf")
+        row(name, measured * 1e6,
+            f"fit={pred_fit * 1e6:.2f}us(x{ratio:.2f}) "
+            f"noc={pred_noc * 1e6:.3f}us stages={len(sched)}")
+
+
+# -- 3. the cost-model selector's cross-over ---------------------------------
+
+def bench_selector():
+    print("\n== choose_algorithm cross-over (alpha-beta priced, "
+          "paper NoC link) ==")
+    for topo, tname in ((None, "flat"), (TOPO, "epiphany3")):
+        lo, hi = 8, 1 << 22
+        ends = (coll.choose_algorithm(N, lo, topo, LINK),
+                coll.choose_algorithm(N, hi, topo, LINK))
+        if ends != ("rd", "ring"):
+            # a constant/topology change moved the cross-over outside the
+            # probed range — report it, don't kill the harness
+            row(f"allreduce_crossover_{tname}_B", float("nan"),
+                f"WARN_no_crossover_in[{lo},{hi}]B picks={ends}")
+            continue
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if coll.choose_algorithm(N, mid, topo, LINK) == "rd":
+                lo = mid
+            else:
+                hi = mid
+        row(f"allreduce_crossover_{tname}_B", float(hi),
+            f"rd<= {lo}B < ring (n={N})")
+
+    # the selection must be consistent with the schedules' own pricing
+    for nbytes in (64, 1 << 21):
+        algo = coll.choose_algorithm(N, nbytes, TOPO, LINK)
+        t_rd = coll.allreduce_schedule(N, nbytes, "rd").time(TOPO, LINK)
+        t_ring = coll.allreduce_schedule(N, nbytes, "ring").time(TOPO, LINK)
+        best = "rd" if t_rd <= t_ring else "ring"
+        status = "" if algo == best else " WARN_mismatch"
+        row(f"auto_pick_{nbytes}B", 0.0,
+            f"{algo}{status} rd={t_rd * 1e6:.2f}us ring={t_ring * 1e6:.2f}us")
+
+
+def main():
+    print("name,us,derived")
+    fit = fit_sim_link()
+    bench_schedules(fit)
+    bench_selector()
+
+
+if __name__ == "__main__":
+    main()

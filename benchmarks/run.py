@@ -18,6 +18,13 @@ def main() -> None:
     for bench in paper_benches.ALL:
         bench()
 
+    print("\n== compiled CommPattern schedules: predicted vs measured ==")
+    try:
+        from . import bench_patterns
+        bench_patterns.main()
+    except Exception as e:  # keep the rest of the harness running
+        print(f"pattern bench skipped: {e}")
+
     print("\n== substrate A/B (ARL shmem vs XLA 'eLib') ==")
     try:
         from . import bench_substrate

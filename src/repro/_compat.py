@@ -1,0 +1,59 @@
+"""Version shims for the pinned environment.
+
+The codebase targets the current jax API; older pinned jax (< 0.5) lacks
+two spellings we use pervasively.  Both have exact legacy equivalents, so
+we backfill them at import rather than sprinkling call sites with guards:
+
+  * ``jax.set_mesh(mesh)``   -> the mesh itself (``Mesh`` has always been a
+    context manager; entering it is what ``set_mesh`` does ambiently).
+    ONLY the ``with jax.set_mesh(mesh):`` form is supported — every call
+    site in this repo uses it.  A bare ``jax.set_mesh(mesh)`` statement
+    would silently not install an ambient mesh on legacy jax.
+  * ``jax.shard_map``        -> ``jax.experimental.shard_map.shard_map``,
+    with the ``check_vma`` kwarg mapped to its old name ``check_rep``.
+  * ``jax.sharding.AxisType`` -> a stand-in enum, with ``jax.make_mesh``
+    wrapped to drop the ``axis_types`` kwarg (legacy meshes are implicitly
+    all-Auto, so dropping it is exact for the Auto case we use).
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = lambda mesh: mesh
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _legacy_sm
+
+        def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                      check_vma=None, **kw):
+            if check_vma is not None:
+                kw["check_rep"] = check_vma
+            return _legacy_sm(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+
+        jax.shard_map = shard_map
+    if not hasattr(jax.lax, "axis_size"):
+        # legacy spelling: a psum of 1 over a named axis constant-folds to
+        # the (python int) axis size
+        jax.lax.axis_size = lambda axis: jax.lax.psum(1, axis)
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+        _legacy_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            if axis_types is not None and any(
+                    t is not AxisType.Auto for t in axis_types):
+                raise NotImplementedError(
+                    "legacy jax supports only Auto axes")
+            return _legacy_make_mesh(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh

@@ -1,11 +1,14 @@
 """ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
-from . import abmodel, collectives, heap, netops, shmem, topology
+from . import abmodel, collectives, heap, netops, pattern, shmem, topology
 from .netops import NetOps, SimNetOps, SpmdNetOps
+from .pattern import CommPattern, Schedule, Stage, as_pattern, compile_pattern
 from .shmem import ShmemContext, sim_ctx, spmd_ctx
 from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
 
 __all__ = [
-    "abmodel", "collectives", "heap", "netops", "shmem", "topology",
-    "NetOps", "SimNetOps", "SpmdNetOps", "ShmemContext", "sim_ctx",
-    "spmd_ctx", "MeshTopology", "epiphany3", "v5e_multipod", "v5e_pod",
+    "abmodel", "collectives", "heap", "netops", "pattern", "shmem",
+    "topology", "NetOps", "SimNetOps", "SpmdNetOps", "CommPattern",
+    "Schedule", "Stage", "as_pattern", "compile_pattern", "ShmemContext",
+    "sim_ctx", "spmd_ctx", "MeshTopology", "epiphany3", "v5e_multipod",
+    "v5e_pod",
 ]

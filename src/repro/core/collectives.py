@@ -13,8 +13,14 @@ Algorithm choices mirror the paper exactly:
                      ring (reduce-scatter + allgather) otherwise.
   * alltoall       — pairwise exchange, one ring offset per stage.
 
-Every routine also has a ``*_stages`` descriptor used by the alpha-beta
-cost model (benchmarks' `derived` column and the roofline cross-check).
+Every algorithm is a ``*_schedule`` builder returning a
+:class:`~repro.core.pattern.Schedule` of compiled
+:class:`~repro.core.pattern.CommPattern` stages (DESIGN.md §9).  The
+executor iterates the schedule's stages; the alpha-beta cost descriptor
+(``*_stages``, the benchmarks' `derived` column, the roofline cross-check)
+is ``schedule.cost(topo)`` on the *same object* — predicted and executed
+schedules cannot drift apart.  `choose_algorithm` prices candidate
+schedules with the cost model to pick the cheapest (`algorithm="auto"`).
 
 All functions take the PE-local array (under SPMD) or the PE-stacked array
 (under SIM) — `_lmap` hides the difference for shape-changing local ops.
@@ -30,6 +36,8 @@ import numpy as np
 from jax import lax
 
 from .netops import NetOps, SimNetOps
+from .pattern import (CommPattern, Schedule, Stage, binomial_stage_pattern,
+                      ring_pattern, xor_pattern)
 
 
 def _lmap(net: NetOps, f: Callable, *xs):
@@ -52,6 +60,139 @@ def _bcast_pe(net: NetOps, shape) -> jnp.ndarray:
     return net.my_pe()
 
 
+def _payload_bytes(net: NetOps, x) -> float:
+    """Per-PE payload bytes of tree `x` (the SIM backend's leading PE axis
+    is not payload)."""
+    leaves = jax.tree.leaves(x)
+    total = float(sum(l.size * l.dtype.itemsize for l in leaves))
+    if isinstance(net, SimNetOps):
+        total /= net.n_pes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# schedule builders — one per paper algorithm
+# ---------------------------------------------------------------------------
+
+def barrier_schedule(n: int) -> Schedule:
+    """Dissemination: round k exchanges 8 bytes of sync state with PE
+    (i + 2^k) — the paper's 8*log2(N) sync array."""
+    return Schedule("barrier.dissemination", tuple(
+        Stage(ring_pattern(n, 1 << k), 8.0) for k in range(_ceil_log2(n))))
+
+
+def broadcast_schedule(n: int, nbytes: float = 0.0, root: int = 0) -> Schedule:
+    """Farthest-first binomial tree: stride p2/2 down to 1 (paper §3.6:
+    'moving the data the farthest distance first')."""
+    stages = []
+    stride = (1 << _ceil_log2(n)) >> 1
+    while stride >= 1:
+        stages.append(Stage(binomial_stage_pattern(n, stride, root),
+                            float(nbytes)))
+        stride >>= 1
+    return Schedule("broadcast.binomial_ff", tuple(stages))
+
+
+def fcollect_schedule(n: int, nbytes: float = 0.0,
+                      algorithm: str | None = None) -> Schedule:
+    """Allgather of `nbytes` blocks: recursive doubling (payload doubles
+    per stage) or ring (n-1 single-block stages)."""
+    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    if algo == "rd":
+        return Schedule("fcollect.rd", tuple(
+            Stage(xor_pattern(n, 1 << k), nbytes * (1 << k))
+            for k in range(_ceil_log2(n))))
+    return Schedule("fcollect.ring", tuple(
+        Stage(ring_pattern(n), float(nbytes)) for _ in range(max(n - 1, 0))))
+
+
+def reduce_scatter_schedule(n: int, nbytes: float = 0.0) -> Schedule:
+    """Ring reduce-scatter: n-1 stages, each moving one 1/n chunk."""
+    return Schedule("reduce_scatter.ring", tuple(
+        Stage(ring_pattern(n), nbytes / max(n, 1))
+        for _ in range(max(n - 1, 0))))
+
+
+def allgather_schedule(n: int, nbytes: float = 0.0) -> Schedule:
+    """Ring allgather of the scattered 1/n chunks (reduce-scatter's dual)."""
+    return Schedule("allgather.ring", tuple(
+        Stage(ring_pattern(n), nbytes / max(n, 1))
+        for _ in range(max(n - 1, 0))))
+
+
+def allreduce_schedule(n: int, nbytes: float = 0.0,
+                       algorithm: str | None = None) -> Schedule:
+    """to_all: recursive doubling (log2 N full-buffer stages,
+    alpha-optimal) or ring reduce-scatter + allgather (~2x buffer total,
+    bandwidth-optimal)."""
+    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    if algo == "rd":
+        return Schedule("allreduce.rd", tuple(
+            Stage(xor_pattern(n, 1 << k), float(nbytes))
+            for k in range(_ceil_log2(n))))
+    return Schedule("allreduce.ring",
+                    reduce_scatter_schedule(n, nbytes).stages
+                    + allgather_schedule(n, nbytes).stages)
+
+
+def alltoall_schedule(n: int, nbytes_total: float = 0.0) -> Schedule:
+    """Pairwise exchange (paper Fig. 9): stage j sends one 1/n block to the
+    PE j ring offsets away."""
+    per = nbytes_total / max(n, 1)
+    return Schedule("alltoall.pairwise", tuple(
+        Stage(ring_pattern(n, j), per) for j in range(1, n)))
+
+
+# Collectives with more than one algorithm to choose between.
+_SELECTABLE: dict[str, Callable[..., Schedule]] = {
+    "allreduce": allreduce_schedule,
+    "fcollect": fcollect_schedule,
+}
+
+
+def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
+                     collective: str = "allreduce") -> str:
+    """Cost-model algorithm selection: price each candidate schedule with
+    the alpha-beta model (eq. 1) on `topo`/`link` and take the cheapest.
+
+    This replaces the hand-tuned byte-threshold switch: recursive doubling
+    pays log2(N) full-payload sends (alpha-optimal), the ring pays ~2x the
+    payload in 2(N-1) chunk sends (bandwidth-optimal); where the cross-over
+    falls depends on alpha, beta AND the mesh hop costs, which is exactly
+    what the model prices."""
+    if n <= 1:
+        return "ring"
+    build = _SELECTABLE[collective]
+    candidates = ["ring"] + (["rd"] if _is_pow2(n) else [])
+    return min(candidates,
+               key=lambda a: build(n, nbytes, algorithm=a).time(topo, link))
+
+
+# ---------------------------------------------------------------------------
+# cost descriptors — thin views over the same schedules that execute
+# ---------------------------------------------------------------------------
+
+def barrier_stages(n: int, topo=None) -> list[tuple[float, float]]:
+    """[(bytes, hops)] per stage for the cost model."""
+    return barrier_schedule(n).cost(topo)
+
+
+def broadcast_stages(n: int, nbytes: float, topo=None):
+    return broadcast_schedule(n, nbytes).cost(topo)
+
+
+def fcollect_stages(n: int, nbytes: float, topo=None, algorithm=None):
+    return fcollect_schedule(n, nbytes, algorithm).cost(topo)
+
+
+def allreduce_stages(n: int, nbytes: float, topo=None, algorithm=None):
+    return allreduce_schedule(n, nbytes, algorithm).cost(topo)
+
+
+def alltoall_stages(n: int, nbytes_total: float, topo=None):
+    return alltoall_schedule(n, nbytes_total).cost(topo)
+
+
 # ---------------------------------------------------------------------------
 # barrier
 # ---------------------------------------------------------------------------
@@ -65,28 +206,9 @@ def barrier(net: NetOps, token=None):
     tok = jnp.zeros((), jnp.int32) if token is None else token
     if isinstance(net, SimNetOps):
         tok = jnp.broadcast_to(tok, (n,) + tok.shape[1:]) if tok.ndim == 0 else tok
-    for k in range(_ceil_log2(n)):
-        stride = 1 << k
-        perm = [(i, (i + stride) % n) for i in range(n)]
-        tok = tok + net.ppermute(tok, perm)
+    for st in barrier_schedule(n).stages:
+        tok = tok + net.ppermute(tok, st.pattern)
     return tok
-
-
-def barrier_stages(n: int, topo=None) -> list[tuple[float, float]]:
-    """[(bytes, hops)] per stage for the cost model (8 bytes of sync state
-    per round, as in the paper's 8*log2(N) sync array)."""
-    out = []
-    for k in range(_ceil_log2(n)):
-        stride = 1 << k
-        hops = _stride_hops(stride, n, topo)
-        out.append((8.0, hops))
-    return out
-
-
-def _stride_hops(stride: int, n: int, topo) -> float:
-    if topo is None:
-        return 1.0
-    return topo.hops(0, stride % n)
 
 
 # ---------------------------------------------------------------------------
@@ -97,35 +219,11 @@ def broadcast(net: NetOps, x, root: int = 0):
     n = net.n_pes
     if n == 1:
         return x
-    p2 = 1 << _ceil_log2(n)
     buf = x
-    # farthest-first: stride p2/2 down to 1 (paper: move the data the
-    # farthest distance first).
-    stride = p2 >> 1
-    while stride >= 1:
-        perm = []
-        dst_mask = np.zeros((n,), dtype=bool)
-        for rel in range(0, n, 2 * stride):
-            src = (rel + root) % n
-            rel_dst = rel + stride
-            if rel_dst < n:
-                dst = (rel_dst + root) % n
-                perm.append((src, dst))
-                dst_mask[dst] = True
-        recv = net.ppermute(buf, perm)
-        buf = net.select(dst_mask, recv, buf)
-        stride >>= 1
+    for st in broadcast_schedule(n, _payload_bytes(net, x), root).stages:
+        recv = net.ppermute(buf, st.pattern)
+        buf = net.select(st.pattern, recv, buf)
     return buf
-
-
-def broadcast_stages(n: int, nbytes: float, topo=None):
-    out = []
-    p2 = 1 << _ceil_log2(n)
-    stride = p2 >> 1
-    while stride >= 1:
-        out.append((float(nbytes), _stride_hops(stride, n, topo)))
-        stride >>= 1
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -170,10 +268,8 @@ def _fcollect_rd(net: NetOps, x, axis: int):
         return lax.dynamic_update_slice(b, v, tuple(starts))
 
     buf = _lmap(net, place, buf, x, pe)
-    for k in range(_ceil_log2(n)):
-        stride = 1 << k
-        perm = [(i, i ^ stride) for i in range(n)]
-        recv = net.ppermute(buf, perm)
+    for st in fcollect_schedule(n, _payload_bytes(net, x), "rd").stages:
+        recv = net.ppermute(buf, st.pattern)
         buf = buf + recv  # disjoint filled regions, zeros elsewhere
     return buf
 
@@ -203,11 +299,10 @@ def _collect_ring(net: NetOps, x, axis: int):
     if RING_SCHEDULE == "dus":
         return _collect_ring_dus(net, x, axis)
     pe = net.my_pe()
-    ring = [(i, (i + 1) % n) for i in range(n)]
     parts = [x]
     cur = x
-    for j in range(1, n):
-        cur = net.ppermute(cur, ring)
+    for st in fcollect_schedule(n, _payload_bytes(net, x), "ring").stages:
+        cur = net.ppermute(cur, st.pattern)
         parts.append(cur)                   # part t holds block (pe - t)
     sim = isinstance(net, SimNetOps)
     stacked = jnp.concatenate(parts, axis=axis + (1 if sim else 0))
@@ -223,7 +318,7 @@ def _collect_ring_dus(net: NetOps, x, axis: int):
     blk = x.shape[axis + (1 if sim else 0)]
     buf = _out_zeros_like(x, axis, n, sim)
     pe = net.my_pe()
-    ring = [(i, (i + 1) % n) for i in range(n)]
+    ring = ring_pattern(n)
 
     cur = x
     for j in range(n):
@@ -238,19 +333,6 @@ def _collect_ring_dus(net: NetOps, x, axis: int):
         if j < n - 1:
             cur = net.ppermute(cur, ring)
     return buf
-
-
-def fcollect_stages(n: int, nbytes: float, topo=None, algorithm=None):
-    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
-    out = []
-    if algo == "rd":
-        for k in range(_ceil_log2(n)):
-            stride = 1 << k
-            out.append((nbytes * stride, _stride_hops(stride, n, topo)))
-    else:
-        for _ in range(n - 1):
-            out.append((float(nbytes), _stride_hops(1, n, topo)))
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -268,41 +350,39 @@ OPS: dict[str, Callable] = {
 }
 
 
-RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: beyond this, bandwidth wins
+RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: the old hand-tuned switch point,
+                                 # kept as a reference for tests/benches;
+                                 # "auto" now prices schedules instead.
 
 
 def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
-              algorithm: str | None = None):
+              algorithm: str | None = None, topo=None, link=None):
     """shmem_TYPE_OP_to_all.
 
     Algorithm selection generalizes the paper's PE-count switch (§3.6:
-    dissemination for powers of two, ring otherwise) with its own
-    small-vs-large-message lesson: recursive doubling moves the FULL
-    buffer log2(N) times (alpha-optimal), the ring moves ~2x the buffer
-    total (bandwidth-optimal), so large payloads take the ring even at
-    power-of-two PE counts ("auto").  Explicit "rd"/"ring" override."""
+    dissemination for powers of two, ring otherwise).  "auto" prices the
+    candidate schedules with the alpha-beta model on `topo`
+    (`choose_algorithm`): recursive doubling moves the FULL buffer log2(N)
+    times (alpha-optimal), the ring moves ~2x the buffer total
+    (bandwidth-optimal), so large payloads take the ring even at
+    power-of-two PE counts.  Explicit "rd"/"ring" override."""
     n = net.n_pes
     if n == 1:
         return x
     fn = combine or OPS[op]
-    if algorithm in (None, "auto"):
-        leaves = jax.tree.leaves(x)
-        nbytes = sum(l.size * l.dtype.itemsize for l in leaves)
-        if algorithm == "auto" and nbytes >= RING_BYTES_THRESHOLD:
-            algo = "ring"
-        else:
-            algo = "rd" if _is_pow2(n) else "ring"
+    if algorithm == "auto":
+        algo = choose_algorithm(n, _payload_bytes(net, x), topo, link)
+    elif algorithm is None:
+        algo = "rd" if _is_pow2(n) else "ring"
     else:
         algo = algorithm
     if algo == "rd":
-        for k in range(_ceil_log2(n)):
-            stride = 1 << k
-            perm = [(i, i ^ stride) for i in range(n)]
-            recv = net.ppermute(x, perm)
+        for st in allreduce_schedule(n, _payload_bytes(net, x), "rd").stages:
+            recv = net.ppermute(x, st.pattern)
             x = jax.tree.map(fn, x, recv)
         return x
     rs, shape_info = _reduce_scatter_ring(net, x, fn)
-    return _allgather_unpad(net, rs, shape_info)
+    return allgather_unpad(net, rs, shape_info)
 
 
 def reduce_scatter(net: NetOps, x, op: str = "sum",
@@ -333,15 +413,15 @@ def _reduce_scatter_ring(net: NetOps, x, fn):
     idx = (pe[..., None] + jnp.arange(n)) % n if sim \
         else (pe + jnp.arange(n)) % n
     r = _take_blocks(net, buf, idx, n, 0)
-    ring = [(i, (i + 1) % n) for i in range(n)]
 
     def static_chunk(b, t):
         return b[..., t * chunk:(t + 1) * chunk] if sim \
             else b[t * chunk:(t + 1) * chunk]
 
     cur = static_chunk(r, 0)                     # chunk[pe]
-    for j in range(1, n):
-        cur = net.ppermute(cur, ring)
+    sched = reduce_scatter_schedule(n, _payload_bytes(net, x))
+    for j, st in enumerate(sched.stages, start=1):
+        cur = net.ppermute(cur, st.pattern)
         cur = fn(static_chunk(r, n - j), cur)    # chunk[(pe - j) mod n]
     # PE p now owns the fully-reduced chunk (p + 1) % n
     own_idx = (pe + 1) % n
@@ -349,18 +429,26 @@ def _reduce_scatter_ring(net: NetOps, x, fn):
     return cur, info
 
 
-def _allgather_unpad(net: NetOps, chunk_val, info):
-    """Ring allgather of the reduce-scatter result, static schedule: parts
-    arrive in ring order; one post-gather restores block order."""
+def allgather_unpad(net: NetOps, chunk_val, info):
+    """Ring allgather of a `reduce_scatter` result, undoing its flatten/pad.
+
+    `info` is the handle `reduce_scatter` returned alongside the owned
+    chunk: ``(orig_shape, size, chunk, own_idx)``.  Static schedule: parts
+    arrive in ring order; one post-gather restores block order, then the
+    padding is stripped and the original shape restored.  Composing
+    ``allgather_unpad(net, *reduce_scatter(net, x))`` is the
+    bandwidth-optimal ring allreduce (~2x payload on the wire vs log2(N)x
+    for recursive doubling) — the ZeRO-style gradient-sync building block
+    (DESIGN.md §8)."""
     orig_shape, size, chunk, own_idx = info
     n = net.n_pes
     sim = isinstance(net, SimNetOps)
     pe = net.my_pe()
-    ring = [(i, (i + 1) % n) for i in range(n)]
+    nbytes = float(chunk * n * chunk_val.dtype.itemsize)
     parts = [chunk_val]                 # part t = chunk (pe + 1 - t) mod n
     cur = chunk_val
-    for j in range(1, n):
-        cur = net.ppermute(cur, ring)
+    for st in allgather_schedule(n, nbytes).stages:
+        cur = net.ppermute(cur, st.pattern)
         parts.append(cur)
     stacked = jnp.concatenate(parts, axis=-1)
     # out block i = part (pe + 1 - i) mod n
@@ -374,18 +462,8 @@ def _allgather_unpad(net: NetOps, chunk_val, info):
     return _lmap(net, unpad, out)
 
 
-def allreduce_stages(n: int, nbytes: float, topo=None, algorithm=None):
-    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
-    out = []
-    if algo == "rd":
-        for k in range(_ceil_log2(n)):
-            stride = 1 << k
-            out.append((float(nbytes), _stride_hops(stride, n, topo)))
-    else:
-        per = nbytes / n
-        for _ in range(2 * (n - 1)):
-            out.append((per, _stride_hops(1, n, topo)))
-    return out
+# Backwards-compatible private alias (promoted to the public API above).
+_allgather_unpad = allgather_unpad
 
 
 # ---------------------------------------------------------------------------
@@ -419,19 +497,14 @@ def alltoall(net: NetOps, x, axis: int = 0):
         return v[tuple(sl)]
 
     parts = [static_blk(r, 0)]          # own block: out[pe] = x_pe[pe]
-    for j in range(1, n):
-        perm = [(i, (i + j) % n) for i in range(n)]
-        recv = net.ppermute(static_blk(r, j), perm)
+    sched = alltoall_schedule(n, _payload_bytes(net, x))
+    for j, st in enumerate(sched.stages, start=1):
+        recv = net.ppermute(static_blk(r, j), st.pattern)
         parts.append(recv)              # part t = out-block (pe - t) mod n
     stacked = jnp.concatenate(parts, axis=ax)
     out_idx = (pe[..., None] - jnp.arange(n)) % n if sim \
         else (pe - jnp.arange(n)) % n
     return _take_blocks(net, stacked, out_idx, n, axis)
-
-
-def alltoall_stages(n: int, nbytes_total: float, topo=None):
-    per = nbytes_total / n
-    return [(per, _stride_hops(j, n, topo)) for j in range(1, n)]
 
 
 # ---------------------------------------------------------------------------
@@ -445,9 +518,12 @@ def put(net: NetOps, x, pattern: Sequence[tuple[int, int]]):
 
 
 def get(net: NetOps, x, pattern: Sequence[tuple[int, int]]):
-    """get along (requester, owner) pairs: owner pushes — the IPI-get."""
-    inv = [(d, s) for s, d in pattern]
-    return net.ppermute(x, inv)
+    """get along (requester, owner) pairs: owner pushes — the IPI-get.
+    The inverse pairs are compiled directly so fan-out reads (many
+    requesters naming one owner) validate against the executed pattern."""
+    if isinstance(pattern, CommPattern):
+        return net.ppermute(x, pattern.inverse)
+    return net.ppermute(x, [(o, r) for r, o in pattern])
 
 
 # ---------------------------------------------------------------------------

@@ -16,14 +16,23 @@ Both expose the same minimal surface, so ``collectives.py`` is written once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .pattern import CommPattern, PatternLike, as_pattern
+
 AxisNames = str | tuple[str, ...]
+
+
+def _mask_of(pe_mask) -> np.ndarray:
+    """A select mask may be given as a host bool array or as a compiled
+    CommPattern (meaning: its destination set)."""
+    if isinstance(pe_mask, CommPattern):
+        return pe_mask.dst_mask
+    return pe_mask
 
 
 class NetOps:
@@ -34,9 +43,12 @@ class NetOps:
     def my_pe(self):
         raise NotImplementedError
 
-    def ppermute(self, x, perm: Sequence[tuple[int, int]]):
+    def ppermute(self, x, perm: PatternLike):
         """Static point-to-point pattern: for each (src, dst) pair, dst
         receives src's shard; PEs not named as a dst receive zeros.
+        `perm` is a raw (src, dst) pair list or a compiled
+        :class:`~repro.core.pattern.CommPattern` (preferred on hot paths —
+        compiled once, reused every call).
 
         This is the 'remote store' primitive.  Like the Epiphany NoC (and
         unlike a remote load) it never blocks the sender — which is why a
@@ -45,10 +57,11 @@ class NetOps:
         raise NotImplementedError
 
     # -- helpers shared by both backends ------------------------------------
-    def select(self, pe_mask: np.ndarray, a, b):
+    def select(self, pe_mask, a, b):
         """Per-PE static selection: where PE's entry in `pe_mask` (a host
-        bool array indexed by pe id) is True take `a` else `b`."""
-        m = jnp.asarray(pe_mask)[self.my_pe()]
+        bool array indexed by pe id, or a CommPattern standing for its
+        destination set) is True take `a` else `b`."""
+        m = jnp.asarray(_mask_of(pe_mask))[self.my_pe()]
         return jax.tree.map(lambda x, y: jnp.where(m, x, y), a, b)
 
 
@@ -67,8 +80,19 @@ class SpmdNetOps(NetOps):
         return lax.axis_index(self.axis)
 
     def ppermute(self, x, perm):
-        perm = [(int(s), int(d)) for s, d in perm]
-        return jax.tree.map(lambda v: lax.ppermute(v, self.axis, perm), x)
+        rounds = as_pattern(perm, self.n_pes).unique_src_rounds()
+
+        def one(v):
+            # destinations are disjoint across rounds and non-destinations
+            # receive zeros, so rounds combine losslessly
+            acc = lax.ppermute(v, self.axis, list(rounds[0])) if rounds \
+                else jnp.zeros_like(v)
+            for r in rounds[1:]:
+                recv = lax.ppermute(v, self.axis, list(r))
+                acc = (acc | recv) if v.dtype == jnp.bool_ else acc + recv
+            return acc
+
+        return jax.tree.map(one, x)
 
     def axis_all_gather(self, x, *, tiled=True):
         return jax.tree.map(
@@ -91,11 +115,8 @@ class SimNetOps(NetOps):
         return idx.reshape(idx.shape + (1,) * (v.ndim - 1))
 
     def ppermute(self, x, perm):
-        src_for_dst = np.full((self.n_pes,), -1, dtype=np.int64)
-        for s, d in perm:
-            src_for_dst[int(d) % self.n_pes] = int(s) % self.n_pes
-        has = jnp.asarray(src_for_dst >= 0)
-        gather_idx = jnp.asarray(np.where(src_for_dst >= 0, src_for_dst, 0))
+        has_np, idx_np = as_pattern(perm, self.n_pes).gather_arrays()
+        has, gather_idx = jnp.asarray(has_np), jnp.asarray(idx_np)
 
         def one(v):
             recv = v[gather_idx]
@@ -105,7 +126,7 @@ class SimNetOps(NetOps):
         return jax.tree.map(one, x)
 
     def select(self, pe_mask, a, b):
-        m = jnp.asarray(pe_mask)
+        m = jnp.asarray(_mask_of(pe_mask))
 
         def one(x, y):
             mm = self._expand_pe_index(m, x)

@@ -1,0 +1,292 @@
+"""Compiled communication patterns — the precomputed-schedule layer.
+
+The paper's PEs precompute their neighbor lists and remote addresses in
+``shmem_init`` so the hot path is a bare memory-mapped store; the JAX
+analogue is compiling a static ``(src, dst)`` pattern ONCE into a
+:class:`CommPattern` carrying everything every consumer used to rebuild
+per call (DESIGN.md §9):
+
+  * the forward pair list (what ``lax.ppermute`` wants),
+  * the inverse pattern (gets and atomic fetches run the reverse edges),
+  * destination/source masks as device-ready arrays (what ``select`` and
+    the SIM backend's gather want),
+  * per-pair weighted hop counts against an attached
+    :class:`~repro.core.topology.MeshTopology` (what the alpha-beta cost
+    model wants).
+
+Patterns are interned per ``(pairs, n_pes)``: compiling the same pattern
+twice returns the *same object*, so repeated collective stages and the
+put/get/atomic call sites share one compilation, and inverse round-trips
+are identity-stable (``p.inverse.inverse is p``).
+
+:class:`Schedule` stacks compiled patterns into the multi-stage plans the
+collectives execute; each :class:`Stage` carries its payload bytes so the
+``(bytes, hops)`` cost descriptor is derived from the very object that
+runs — there is no hand-maintained parallel cost function to drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable, Sequence, Union
+
+import numpy as np
+
+from .topology import MeshTopology
+
+Pairs = Sequence[tuple[int, int]]
+PatternLike = Union["CommPattern", Pairs]
+
+_INTERN_LOCK = threading.Lock()
+_INTERN: dict[tuple[tuple[tuple[int, int], ...], int], "CommPattern"] = {}
+# Interning is a cache, not a registry: a job issuing data-dependent
+# ad-hoc patterns (one per step) must not pin them all for the process
+# lifetime.  Beyond the cap the oldest entries are dropped — they keep
+# working, they just stop being shared/identity-stable.  The canonical
+# collective families (ring/xor/binomial per n_pes) number far below this.
+_INTERN_MAX = 4096
+
+
+class CommPattern:
+    """A static point-to-point pattern compiled for a fixed PE count.
+
+    Never construct directly — go through :func:`compile_pattern` (or
+    :func:`as_pattern`) so instances are interned and compile-once caching
+    holds.  Instances are immutable and hash/compare by identity.
+    """
+
+    __slots__ = (
+        "pairs", "n_pes", "dst_mask", "src_mask", "src_for_dst",
+        "_inverse", "_hops_cache", "_device_cache", "_rounds_cache",
+    )
+
+    def __init__(self, pairs: tuple[tuple[int, int], ...], n_pes: int,
+                 _token=None):
+        if _token is not _COMPILE_TOKEN:
+            raise TypeError("use compile_pattern()/as_pattern(), not "
+                            "CommPattern(...) — patterns are interned")
+        self.pairs = pairs
+        self.n_pes = n_pes
+        src_for_dst = np.full((n_pes,), -1, dtype=np.int64)
+        src_mask = np.zeros((n_pes,), dtype=bool)
+        dst_mask = np.zeros((n_pes,), dtype=bool)
+        for s, d in pairs:
+            src_for_dst[d] = s
+            src_mask[s] = True
+            dst_mask[d] = True
+        src_for_dst.setflags(write=False)
+        src_mask.setflags(write=False)
+        dst_mask.setflags(write=False)
+        self.src_for_dst = src_for_dst
+        self.src_mask = src_mask
+        self.dst_mask = dst_mask
+        self._inverse: CommPattern | None = None
+        self._hops_cache: dict[MeshTopology, np.ndarray] = {}
+        self._device_cache: tuple | None = None
+        self._rounds_cache: tuple[tuple[tuple[int, int], ...], ...] | None = None
+
+    # -- structure ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.pairs)
+
+    def __iter__(self):
+        return iter(self.pairs)
+
+    def __repr__(self) -> str:
+        shown = list(self.pairs[:4])
+        more = f", +{len(self.pairs) - 4} more" if len(self.pairs) > 4 else ""
+        return f"CommPattern(n_pes={self.n_pes}, pairs={shown}{more})"
+
+    @property
+    def inverse(self) -> "CommPattern":
+        """The reversed-edge pattern (dst, src) — what a get or an atomic
+        fetch runs.  Interned, so ``p.inverse.inverse is p``."""
+        if self._inverse is None:
+            inv = compile_pattern([(d, s) for s, d in self.pairs], self.n_pes)
+            self._inverse = inv
+            if inv._inverse is None:
+                inv._inverse = self
+        return self._inverse
+
+    # -- device-ready arrays -------------------------------------------------
+    def gather_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(has_src, gather_idx) for the SIM backend's gather:
+        ``recv[d] = x[gather_idx[d]] if has_src[d]``.  Built lazily once.
+
+        Deliberately numpy, not jnp: a cached jnp array created while some
+        caller was tracing would leak that trace's tracers into every later
+        caller.  Numpy constants are trace-safe and XLA constant-folds the
+        per-trace jnp.asarray."""
+        if self._device_cache is None:
+            has = self.src_for_dst >= 0
+            idx = np.where(has, self.src_for_dst, 0)
+            has.setflags(write=False)
+            idx.setflags(write=False)
+            self._device_cache = (has, idx)
+        return self._device_cache
+
+    def unique_src_rounds(self) -> tuple[tuple[tuple[int, int], ...], ...]:
+        """The pairs split into rounds with unique sources.
+
+        Destinations are unique by construction, but sources may repeat
+        (fan-out: one owner pushing to many requesters, e.g. an IPI-get
+        with several readers).  ``lax.ppermute`` requires both sides
+        unique, so the SPMD backend runs one ppermute per round — the
+        analogue of the owner serializing its pushes on the NoC.  Single
+        round (the common case) means one ppermute, zero overhead."""
+        if self._rounds_cache is None:
+            rounds: list[list[tuple[int, int]]] = []
+            used: list[set[int]] = []
+            for s, d in self.pairs:
+                for r, u in zip(rounds, used):
+                    if s not in u:
+                        r.append((s, d))
+                        u.add(s)
+                        break
+                else:
+                    rounds.append([(s, d)])
+                    used.append({s})
+            self._rounds_cache = tuple(tuple(r) for r in rounds)
+        return self._rounds_cache
+
+    # -- topology-derived cost metadata --------------------------------------
+    def pair_hops(self, topo: MeshTopology | None) -> np.ndarray:
+        """Weighted hop distance of every (src, dst) edge under `topo`
+        (1.0 per edge when no topology is attached)."""
+        if topo is None:
+            return np.ones((len(self.pairs),), dtype=np.float64)
+        cached = self._hops_cache.get(topo)
+        if cached is None:
+            cached = np.array([topo.hops(s, d) for s, d in self.pairs],
+                              dtype=np.float64)
+            cached.setflags(write=False)
+            self._hops_cache[topo] = cached
+        return cached
+
+    def max_hops(self, topo: MeshTopology | None) -> float:
+        """Worst-path hop count — the stage latency term under
+        dimension-ordered routing with no congestion (all edges of a stage
+        fly concurrently; the stage completes when the longest one lands)."""
+        h = self.pair_hops(topo)
+        return float(h.max()) if len(h) else 0.0
+
+    def total_hops(self, topo: MeshTopology | None) -> float:
+        """Sum of edge hop counts — the stage's aggregate link occupancy
+        (the congestion/energy term, not the latency term)."""
+        return float(self.pair_hops(topo).sum())
+
+
+_COMPILE_TOKEN = object()
+
+
+def _normalize(pattern: Pairs, n_pes: int) -> tuple[tuple[int, int], ...]:
+    pairs = tuple(sorted((int(s) % n_pes, int(d) % n_pes)
+                         for s, d in pattern))
+    dsts = [d for _, d in pairs]
+    if len(set(dsts)) != len(dsts):
+        raise ValueError(f"pattern names a destination twice: {pairs}")
+    return pairs
+
+
+def compile_pattern(pattern: Pairs, n_pes: int) -> CommPattern:
+    """Compile (and intern) a static (src, dst) pattern for `n_pes` PEs.
+
+    Pairs are taken mod n_pes and canonically sorted, so two call sites
+    listing the same edges in different orders share one compiled object.
+    """
+    if isinstance(pattern, CommPattern):
+        if pattern.n_pes != n_pes:
+            raise ValueError(
+                f"pattern compiled for {pattern.n_pes} PEs used with {n_pes}")
+        return pattern
+    key = (_normalize(pattern, n_pes), n_pes)
+    got = _INTERN.get(key)
+    if got is None:
+        with _INTERN_LOCK:
+            got = _INTERN.get(key)
+            if got is None:
+                got = CommPattern(key[0], n_pes, _token=_COMPILE_TOKEN)
+                while len(_INTERN) >= _INTERN_MAX:
+                    _INTERN.pop(next(iter(_INTERN)))
+                _INTERN[key] = got
+    return got
+
+
+def as_pattern(pattern: PatternLike, n_pes: int) -> CommPattern:
+    """Coerce a raw pair list or an already-compiled pattern."""
+    return compile_pattern(pattern, n_pes)
+
+
+def cache_size() -> int:
+    return len(_INTERN)
+
+
+# -- canonical pattern families (the collectives' vocabulary) ----------------
+
+def ring_pattern(n: int, offset: int = 1) -> CommPattern:
+    """Every PE sends to (pe + offset) mod n — one ring/pairwise stage."""
+    return compile_pattern([(i, (i + offset) % n) for i in range(n)], n)
+
+
+def xor_pattern(n: int, stride: int) -> CommPattern:
+    """Recursive-doubling exchange: i <-> i ^ stride (n a power of two)."""
+    return compile_pattern([(i, i ^ stride) for i in range(n)], n)
+
+
+def binomial_stage_pattern(n: int, stride: int, root: int = 0) -> CommPattern:
+    """One farthest-first binomial broadcast stage: subtree roots at
+    relative rank multiples of 2*stride push to rank+stride (paper §3.6)."""
+    pairs = []
+    for rel in range(0, n, 2 * stride):
+        rel_dst = rel + stride
+        if rel_dst < n:
+            pairs.append(((rel + root) % n, (rel_dst + root) % n))
+    return compile_pattern(pairs, n)
+
+
+# -- schedules ---------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One serialized step of a collective: a compiled pattern plus the
+    per-edge payload it moves."""
+
+    pattern: CommPattern
+    nbytes: float
+
+    def cost(self, topo: MeshTopology | None = None) -> tuple[float, float]:
+        """(bytes, hops) — the alpha-beta model's stage descriptor."""
+        return (float(self.nbytes), self.pattern.max_hops(topo))
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """An ordered list of stages; what a collective algorithm *is*.
+
+    The same object both drives execution (consumers iterate `stages` and
+    ppermute each `stage.pattern`) and prices itself for the cost model —
+    so predicted and executed schedules cannot diverge.
+    """
+
+    name: str
+    stages: tuple[Stage, ...]
+
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def __iter__(self) -> Iterable[Stage]:
+        return iter(self.stages)
+
+    def cost(self, topo: MeshTopology | None = None) -> list[tuple[float, float]]:
+        """[(bytes, hops)] per stage — feed to
+        `abmodel.modeled_collective_time`."""
+        return [st.cost(topo) for st in self.stages]
+
+    def time(self, topo: MeshTopology | None = None, link=None) -> float:
+        """Alpha-beta modeled wall time of the whole schedule."""
+        from . import abmodel
+        link = link if link is not None else abmodel.ICI_V5E
+        return abmodel.modeled_collective_time(self.cost(topo), link)
+
+    def total_bytes(self) -> float:
+        return sum(st.nbytes for st in self.stages)

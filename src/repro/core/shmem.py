@@ -19,7 +19,7 @@ anything that follows).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,7 @@ from jax import lax
 
 from . import collectives as coll
 from .netops import NetOps, SimNetOps, SpmdNetOps
+from .pattern import CommPattern, PatternLike, as_pattern
 from .topology import MeshTopology
 
 
@@ -48,10 +49,14 @@ class ShmemContext:
     """One PE's view of the library (SPMD) or the whole chip's (SIM)."""
 
     def __init__(self, net: NetOps, topo: MeshTopology | None = None,
-                 use_wand_barrier: bool = False):
+                 use_wand_barrier: bool = False, link=None):
         self.net = net
         self.topo = topo
         self.use_wand_barrier = use_wand_barrier
+        # alpha-beta LinkModel that algorithm="auto" prices schedules with
+        # (None = abmodel.ICI_V5E); pair with topo so selection and the
+        # benchmarks' derived column agree on constants.
+        self.link = link
         self._pending: list[Future] = []
 
     # -- setup / query ------------------------------------------------------
@@ -68,21 +73,35 @@ class ShmemContext:
         address' here is the (pe, offset) pair used by static patterns."""
         return (pe % self.n_pes, offset)
 
+    def compile(self, pattern: PatternLike) -> CommPattern:
+        """Compile (or pass through) a static (src, dst) pattern for this
+        context's PE count — the shmem_init-time schedule precompilation
+        (DESIGN.md §9).  Interned: same pattern, same object."""
+        return as_pattern(pattern, self.n_pes)
+
+    def _owner_push(self, pattern: PatternLike) -> CommPattern:
+        """(requester, owner) pairs -> the compiled owner->requester push
+        pattern the IPI-get executes.  Compiled directly from the inverse
+        pairs so fan-out reads (many requesters, one owner) validate
+        against the pattern that actually runs — whose destinations (the
+        requesters) must be unique, not its sources."""
+        if isinstance(pattern, CommPattern):
+            return pattern.inverse
+        return self.compile([(o, r) for r, o in pattern])
+
     # -- RMA ------------------------------------------------------------------
-    def put(self, x, pattern: Sequence[tuple[int, int]], local=None):
+    def put(self, x, pattern: PatternLike, local=None):
         """Deliver src's shard to dst for each (src, dst); PEs not addressed
         keep `local` (default: their own x)."""
+        p = self.compile(pattern)
         local = x if local is None else local
-        recv = self.net.ppermute(x, pattern)
-        dst_mask = np.zeros((self.n_pes,), bool)
-        for _, d in pattern:
-            dst_mask[d % self.n_pes] = True
-        return self.net.select(dst_mask, recv, local)
+        recv = self.net.ppermute(x, p)
+        return self.net.select(p, recv, local)
 
-    def get(self, x, pattern: Sequence[tuple[int, int]], local=None):
-        """(requester, owner) pairs; owner pushes (IPI-get)."""
-        inv = [(o, r) for r, o in pattern]
-        return self.put(x, inv, local=local)
+    def get(self, x, pattern: PatternLike, local=None):
+        """(requester, owner) pairs; owner pushes (IPI-get).  Many
+        requesters may name the same owner (fan-out read)."""
+        return self.put(x, self._owner_push(pattern), local=local)
 
     def iput(self, x, pattern, *, sst: int = 1, dst: int = 1,
              nelems: int | None = None, local=None):
@@ -90,19 +109,16 @@ class ShmemContext:
         strided extension over the 2D DMA descriptors): take every sst-th
         element of the source's leading axis, deliver to every dst-th slot
         of the target's leading axis."""
+        p = self.compile(pattern)
         local = x if local is None else local
         n = nelems if nelems is not None else (x.shape[-1] // max(sst, 1))
         sel = x[..., ::sst][..., :n]
-        recv = self.net.ppermute(sel, pattern)
-        dst_mask = np.zeros((self.n_pes,), bool)
-        for _, d in pattern:
-            dst_mask[d % self.n_pes] = True
+        recv = self.net.ppermute(sel, p)
         upd = local.at[..., : n * dst:dst].set(recv)
-        return self.net.select(dst_mask, upd, local)
+        return self.net.select(p, upd, local)
 
     def iget(self, x, pattern, **kw):
-        inv = [(o, r) for r, o in pattern]
-        return self.iput(x, inv, **kw)
+        return self.iput(x, self._owner_push(pattern), **kw)
 
     def put_nbi(self, x, pattern, local=None) -> Future:
         f = Future(self.put(x, pattern, local=local))
@@ -152,8 +168,11 @@ class ShmemContext:
         return coll.fcollect(self.net, x, axis, algorithm)
 
     def to_all(self, x, op: str = "sum", algorithm=None):
-        """shmem_TYPE_OP_to_all."""
-        return coll.allreduce(self.net, x, op, algorithm=algorithm)
+        """shmem_TYPE_OP_to_all.  algorithm="auto" prices the candidate
+        schedules against this context's topology and link model
+        (DESIGN.md §9)."""
+        return coll.allreduce(self.net, x, op, algorithm=algorithm,
+                              topo=self.topo, link=self.link)
 
     def reduce_scatter(self, x, op: str = "sum"):
         return coll.reduce_scatter(self.net, x, op)
@@ -170,17 +189,15 @@ class ShmemContext:
         new = jnp.where(var == 0, value, var)
         return old, new
 
-    def atomic_fetch_add(self, var, contrib, pattern: Sequence[tuple[int, int]]):
+    def atomic_fetch_add(self, var, contrib, pattern: PatternLike):
         """Each (requester, target): requester adds `contrib` to target's
         `var`, fetching the pre-update value.  One requester per target per
         call (a permutation pattern — e.g. the paper's Fig. 5 'tight loop
         on the next neighboring PE').  Returns (fetched, new_var)."""
-        delivered = self.net.ppermute(contrib, pattern)
-        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
-        tgt_mask = np.zeros((self.n_pes,), bool)
-        for _, t in pattern:
-            tgt_mask[t % self.n_pes] = True
-        new_var = self.net.select(tgt_mask, var + delivered, var)
+        p = self.compile(pattern)
+        delivered = self.net.ppermute(contrib, p)
+        fetched = self.net.ppermute(var, p.inverse)
+        new_var = self.net.select(p, var + delivered, var)
         return fetched, new_var
 
     def atomic_fetch_add_shared(self, var, contrib):
@@ -193,23 +210,19 @@ class ShmemContext:
         return fetched, var + total
 
     def atomic_swap(self, var, value, pattern):
-        delivered = self.net.ppermute(value, pattern)
-        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
-        tgt_mask = np.zeros((self.n_pes,), bool)
-        for _, t in pattern:
-            tgt_mask[t % self.n_pes] = True
-        new_var = self.net.select(tgt_mask, delivered, var)
+        p = self.compile(pattern)
+        delivered = self.net.ppermute(value, p)
+        fetched = self.net.ppermute(var, p.inverse)
+        new_var = self.net.select(p, delivered, var)
         return fetched, new_var
 
     def atomic_compare_swap(self, var, cond, value, pattern):
-        delivered = self.net.ppermute(value, pattern)
-        dcond = self.net.ppermute(cond, pattern)
-        fetched = self.net.ppermute(var, [(t, r) for r, t in pattern])
-        tgt_mask = np.zeros((self.n_pes,), bool)
-        for _, t in pattern:
-            tgt_mask[t % self.n_pes] = True
+        p = self.compile(pattern)
+        delivered = self.net.ppermute(value, p)
+        dcond = self.net.ppermute(cond, p)
+        fetched = self.net.ppermute(var, p.inverse)
         swapped = jnp.where(var == dcond, delivered, var)
-        new_var = self.net.select(tgt_mask, swapped, var)
+        new_var = self.net.select(p, swapped, var)
         return fetched, new_var
 
     # -- locks (§3.7) -------------------------------------------------------

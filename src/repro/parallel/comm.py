@@ -27,6 +27,7 @@ from jax import lax
 
 from ..core import collectives as coll
 from ..core.netops import SpmdNetOps
+from ..core.topology import MeshTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,19 +53,29 @@ class Comm:
 
     tuning:
       allreduce_algo : "paper" (dissemination for pow2 / ring otherwise,
-                       §3.6 verbatim) or "auto" (adds the size switch —
-                       ring for >=1MiB payloads; beyond-paper, §Perf P1)
+                       §3.6 verbatim) or "auto" (cost-model selection:
+                       candidate Schedules priced with the alpha-beta
+                       model on `topo` via `coll.choose_algorithm`;
+                       beyond-paper, DESIGN.md §9)
+      topo           : MeshTopology the cost model prices hops against
+                       (None = flat unit-hop network)
+      link           : alpha-beta LinkModel "auto" prices with
+                       (None = abmodel.ICI_V5E)
       grad_rs        : ZeRO-1 style reduce-scatter + allgather gradient
                        sync instead of allreduce (beyond-paper, §Perf P2)
     """
 
     def __init__(self, axes: AxisSpec, backend: str = "shmem",
-                 allreduce_algo: str = "paper", grad_rs: bool = False):
+                 allreduce_algo: str = "paper", grad_rs: bool = False,
+                 topo: MeshTopology | None = None, link=None):
         assert backend in ("shmem", "xla")
+        assert allreduce_algo in ("paper", "auto", "rd", "ring")
         self.axes = axes
         self.backend = backend
         self.allreduce_algo = allreduce_algo
         self.grad_rs = grad_rs
+        self.topo = topo
+        self.link = link
 
     # -- helpers -------------------------------------------------------------
     def _net(self, axis) -> SpmdNetOps:
@@ -95,7 +106,8 @@ class Comm:
         net = self._net(axis)
         algo = None if self.allreduce_algo == "paper" else self.allreduce_algo
         return jax.tree.map(
-            lambda v: coll.allreduce(net, v, op, algorithm=algo), x)
+            lambda v: coll.allreduce(net, v, op, algorithm=algo,
+                                     topo=self.topo, link=self.link), x)
 
     def allgather(self, x, axis, *, concat_axis: int = 0):
         if axis is None or axis == ():
@@ -163,7 +175,7 @@ class Comm:
             def one(g):
                 net = self._net(dax)
                 own, info = coll.reduce_scatter(net, g, "sum")
-                out = coll._allgather_unpad(net, own, info)
+                out = coll.allgather_unpad(net, own, info)
                 if axes.pod is not None:
                     out = self.allreduce(out, axes.pod)
                 return out

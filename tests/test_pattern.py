@@ -1,0 +1,235 @@
+"""The compiled CommPattern/Schedule layer: compile-once interning,
+inverse round-trips, mask correctness vs the old inline loops, hop costs
+against MeshTopology, schedule/cost consistency, and the cost-model
+algorithm selector."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import abmodel, collectives as coll, sim_ctx
+from repro.core.pattern import (CommPattern, Schedule, Stage, as_pattern,
+                                binomial_stage_pattern, compile_pattern,
+                                ring_pattern, xor_pattern)
+from repro.core.topology import epiphany3, v5e_multipod
+
+N = 16
+RING = [(i, (i + 1) % N) for i in range(N)]
+
+
+# -- compile-once caching ----------------------------------------------------
+
+def test_compile_is_interned():
+    p1 = compile_pattern(RING, N)
+    p2 = compile_pattern(list(reversed(RING)), N)       # order-insensitive
+    p3 = compile_pattern([(s + N, d + N) for s, d in RING], N)  # mod n_pes
+    assert p1 is p2 is p3
+    assert p1 is ring_pattern(N)
+    assert as_pattern(p1, N) is p1                      # pass-through
+
+
+def test_interning_distinguishes_n_pes_and_pairs():
+    assert compile_pattern([(0, 1)], 4) is not compile_pattern([(0, 1)], 8)
+    assert compile_pattern([(0, 1)], 4) is not compile_pattern([(1, 0)], 4)
+
+
+def test_direct_construction_rejected():
+    with pytest.raises(TypeError):
+        CommPattern(((0, 1),), 4)
+
+
+def test_duplicate_destination_rejected():
+    with pytest.raises(ValueError):
+        compile_pattern([(0, 2), (1, 2)], 4)
+
+
+def test_wrong_pe_count_rejected():
+    p = compile_pattern(RING, N)
+    with pytest.raises(ValueError):
+        as_pattern(p, N + 1)
+
+
+# -- inverse -----------------------------------------------------------------
+
+def test_inverse_roundtrip_identity():
+    p = compile_pattern(RING, N)
+    assert p.inverse.inverse is p
+    assert sorted(p.inverse.pairs) == sorted((d, s) for s, d in p.pairs)
+    # inverse is itself interned: compiling the reversed pairs hits it
+    assert compile_pattern([(d, s) for s, d in RING], N) is p.inverse
+
+
+def test_inverse_of_partial_pattern():
+    p = compile_pattern([(2, 7), (0, 3)], 8)
+    assert p.inverse.pairs == ((3, 0), (7, 2))
+    np.testing.assert_array_equal(p.inverse.dst_mask, p.src_mask)
+    np.testing.assert_array_equal(p.inverse.src_mask, p.dst_mask)
+
+
+# -- masks vs the old inline loops ------------------------------------------
+
+@pytest.mark.parametrize("pattern", [
+    RING,
+    [(0, 3)],
+    [(2, 7), (5, 1), (0, 4)],
+    [(i, i ^ 4) for i in range(N)],
+])
+def test_masks_match_inline_loops(pattern):
+    p = compile_pattern(pattern, N)
+    # the loop every call site used to rebuild per call:
+    dst_mask = np.zeros((N,), bool)
+    for _, d in pattern:
+        dst_mask[d % N] = True
+    src_mask = np.zeros((N,), bool)
+    for s, _ in pattern:
+        src_mask[s % N] = True
+    src_for_dst = np.full((N,), -1, dtype=np.int64)
+    for s, d in pattern:
+        src_for_dst[d % N] = s % N
+    np.testing.assert_array_equal(p.dst_mask, dst_mask)
+    np.testing.assert_array_equal(p.src_mask, src_mask)
+    np.testing.assert_array_equal(p.src_for_dst, src_for_dst)
+    has, idx = p.gather_arrays()
+    np.testing.assert_array_equal(has, src_for_dst >= 0)
+    np.testing.assert_array_equal(idx, np.where(src_for_dst >= 0,
+                                                src_for_dst, 0))
+
+
+# -- hop costs against MeshTopology -----------------------------------------
+
+@pytest.mark.parametrize("topo", [epiphany3(), v5e_multipod(2)],
+                         ids=["epiphany3", "v5e_multipod"])
+def test_pair_hops_match_topology(topo):
+    n = topo.n_pes
+    for p in (ring_pattern(n), xor_pattern(n, 4),
+              binomial_stage_pattern(n, n // 2)):
+        expect = np.array([topo.hops(s, d) for s, d in p.pairs])
+        np.testing.assert_allclose(p.pair_hops(topo), expect)
+        assert p.max_hops(topo) == expect.max()
+        assert p.total_hops(topo) == pytest.approx(expect.sum())
+    # cached: second call returns the same array object
+    p = ring_pattern(n)
+    assert p.pair_hops(topo) is p.pair_hops(topo)
+
+
+def test_hops_default_flat_network():
+    p = ring_pattern(8)
+    np.testing.assert_allclose(p.pair_hops(None), np.ones(8))
+    assert p.max_hops(None) == 1.0
+
+
+# -- schedules ---------------------------------------------------------------
+
+def test_schedule_cost_is_derived_from_executing_stages():
+    """Every *_stages cost descriptor must be the .cost() of the same
+    Schedule whose stages the executor iterates."""
+    topo = epiphany3()
+    for nbytes in (64.0, 4096.0):
+        assert coll.barrier_stages(N, topo) == \
+            coll.barrier_schedule(N).cost(topo)
+        assert coll.broadcast_stages(N, nbytes, topo) == \
+            coll.broadcast_schedule(N, nbytes).cost(topo)
+        for algo in ("rd", "ring"):
+            assert coll.allreduce_stages(N, nbytes, topo, algo) == \
+                coll.allreduce_schedule(N, nbytes, algo).cost(topo)
+            assert coll.fcollect_stages(N, nbytes, topo, algo) == \
+                coll.fcollect_schedule(N, nbytes, algo).cost(topo)
+        assert coll.alltoall_stages(N, nbytes * N, topo) == \
+            coll.alltoall_schedule(N, nbytes * N).cost(topo)
+
+
+def test_schedule_stage_structure():
+    sched = coll.allreduce_schedule(8, 800.0, "ring")
+    assert len(sched) == 2 * 7                      # rs + ag
+    assert all(st.pattern is ring_pattern(8) for st in sched.stages)
+    assert all(st.nbytes == pytest.approx(100.0) for st in sched.stages)
+    rd = coll.allreduce_schedule(8, 800.0, "rd")
+    assert [st.pattern for st in rd.stages] == \
+        [xor_pattern(8, 1), xor_pattern(8, 2), xor_pattern(8, 4)]
+    fc = coll.fcollect_schedule(8, 100.0, "rd")
+    assert [st.nbytes for st in fc.stages] == [100.0, 200.0, 400.0]
+
+
+def test_schedule_time_matches_abmodel():
+    topo = epiphany3()
+    sched = coll.broadcast_schedule(16, 1024.0)
+    link = abmodel.EPIPHANY_NOC
+    assert sched.time(topo, link) == pytest.approx(
+        abmodel.modeled_collective_time(sched.cost(topo), link))
+
+
+# -- cost-model algorithm selection ------------------------------------------
+
+def test_choose_algorithm_small_vs_large():
+    assert coll.choose_algorithm(8, 64.0) == "rd"
+    assert coll.choose_algorithm(8, float(1 << 21)) == "ring"
+    assert coll.choose_algorithm(6, 64.0) == "ring"     # non-pow2: no rd
+    assert coll.choose_algorithm(1, 64.0) == "ring"
+
+
+def test_choose_algorithm_agrees_with_schedule_pricing():
+    topo = epiphany3()
+    link = abmodel.EPIPHANY_NOC
+    for nbytes in (8.0, 512.0, 65536.0, float(1 << 22)):
+        algo = coll.choose_algorithm(16, nbytes, topo, link)
+        t = {a: coll.allreduce_schedule(16, nbytes, a).time(topo, link)
+             for a in ("rd", "ring")}
+        assert t[algo] == min(t.values())
+
+
+def test_allreduce_auto_matches_fixed_algorithms():
+    n = 8
+    ctx = sim_ctx(n, epiphany3())
+    x = jnp.asarray(np.random.RandomState(0).randn(n, 32).astype(np.float32))
+    ref = np.tile(np.asarray(x).sum(0), (n, 1))
+    out = ctx.to_all(x, "sum", algorithm="auto")
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5)
+
+
+def test_get_fanout_many_requesters_one_owner():
+    """Multiple requesters reading the same owner is a legal get: the
+    executed (owner -> requester) push has unique destinations even though
+    the forward pattern names the owner twice."""
+    n = 8
+    ctx = sim_ctx(n, epiphany3())
+    x = jnp.asarray(np.random.RandomState(4).randn(n, 4).astype(np.float32))
+    out = ctx.get(x, [(0, 2), (1, 2), (5, 2)])
+    ref = np.asarray(x).copy()
+    ref[0] = ref[1] = ref[5] = ref[2]
+    np.testing.assert_allclose(np.asarray(out), ref)
+    # module-level collectives.get agrees (zeros where not addressed)
+    from repro.core.netops import SimNetOps
+    raw = coll.get(SimNetOps(n), x, [(0, 2), (1, 2)])
+    np.testing.assert_allclose(np.asarray(raw)[0], np.asarray(x)[2])
+    np.testing.assert_allclose(np.asarray(raw)[1], np.asarray(x)[2])
+    np.testing.assert_allclose(np.asarray(raw)[3], 0.0)
+
+
+def test_intern_cache_bounded():
+    from repro.core import pattern as pat
+    before = pat.cache_size()
+    assert before <= pat._INTERN_MAX
+    # ad-hoc patterns beyond the cap must not grow the cache unboundedly
+    for i in range(64):
+        compile_pattern([(0, 1), (1, (i % 30) + 2)], 64)
+    assert pat.cache_size() <= pat._INTERN_MAX
+
+
+# -- compiled patterns through the public API --------------------------------
+
+def test_shmem_api_accepts_compiled_patterns():
+    n = 8
+    ctx = sim_ctx(n, epiphany3())
+    x = jnp.asarray(np.random.RandomState(3).randn(n, 4).astype(np.float32))
+    p = ctx.compile([(0, 3)])
+    assert p is ctx.compile([(0, 3)])                    # interned via ctx
+    out_p = ctx.put(x, p)
+    out_l = ctx.put(x, [(0, 3)])
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_l))
+    g_p = ctx.get(x, p)
+    ref = np.asarray(x).copy()
+    ref[0] = ref[3]
+    np.testing.assert_allclose(np.asarray(g_p), ref)
+    ring = ctx.compile([(i, (i + 1) % n) for i in range(n)])
+    f, nv = ctx.atomic_fetch_add(
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.int32), ring)
+    np.testing.assert_array_equal(np.asarray(nv), 1)

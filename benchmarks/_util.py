@@ -1,0 +1,32 @@
+"""Shared timing/payload helpers for the benchmark harnesses — one copy
+of the methodology so bench_patterns and bench_overlap measure (and can
+be compared in the same CI artifact) identically."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 8) -> float:
+    """Median-free steady-state wall time per call, seconds: jit, force
+    the first compile+run, warm up, then average `iters` dispatches."""
+    jitted = jax.jit(fn)
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    for _ in range(warmup - 1):
+        jax.block_until_ready(jitted(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def sized(nbytes, n: int, seed: int = 0):
+    """A (n_pes, nbytes/4) f32 payload — `nbytes` per PE."""
+    w = max(1, int(nbytes) // 4)
+    return jnp.asarray(np.random.RandomState(seed).randn(n, w)
+                       .astype(np.float32))

@@ -1,0 +1,178 @@
+"""Overlap-runtime benchmark: measured overlap fraction for the pending-op
+engine (put_nbi -> compute -> quiet) and the pipelined-vs-monolithic
+schedule cross-over (DESIGN.md §10).
+
+Three sections, mirroring bench_patterns' predicted-vs-measured discipline
+(the modeled columns come from the SAME Schedule objects that execute):
+
+  1. Overlap fraction: wall time of comm alone, compute alone, and the
+     put_nbi -> compute -> quiet overlap program.  overlap = (t_comm +
+     t_comp - t_both) / min(t_comm, t_comp): 1.0 means the cheaper phase
+     fully hides behind the other, 0.0 means serialized.  On a
+     single-stream CPU simulator this measures the substrate's true
+     concurrency (expect ~0 there; >0 on backends with concurrent thunk
+     execution) — the modeled column shows what the e-DMA engine gives.
+  2. Pipelined vs monolithic: measured SIM wall time AND modeled time
+     (fitted SIM link + paper NoC constants) for chunked vs eager
+     execution of the same schedule, plus the modeled cross-over size
+     where chunking starts to win.
+  3. Selector: choose_schedule must pick n_chunks == 1 below the modeled
+     cross-over and > 1 above it, consistent with the schedules' own
+     pipelined_time pricing.
+
+  PYTHONPATH=src python -m benchmarks.bench_overlap
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import abmodel, collectives as coll, sim_ctx
+from repro.core.netops import SimNetOps
+from repro.core.topology import epiphany3
+
+from ._util import sized, time_fn as _time
+
+TOPO = epiphany3()
+N = TOPO.n_pes
+NOC = abmodel.EPIPHANY_NOC
+PIPE_CHUNKS = 8
+ROWS: list[tuple] = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _sized(nbytes, seed=0):
+    return sized(nbytes, N, seed)
+
+
+def fit_sim_link() -> abmodel.LinkModel:
+    """Fit the SIM substrate's own alpha-beta from bare ring stages (the
+    paper's Fig. 3 methodology applied to the simulator)."""
+    net = SimNetOps(N)
+    pattern = coll.fcollect_schedule(N, 0.0, "ring").stages[0].pattern
+    sizes = [64, 256, 1024, 4096, 16384, 65536]
+    times = [_time(lambda v: net.ppermute(v, pattern), _sized(s))
+             for s in sizes]
+    fit = abmodel.fit(sizes, times)
+    link = abmodel.LinkModel(alpha_s=max(fit.alpha, 1e-9), hop_s=0.0,
+                             bw_Bps=max(fit.inv_beta, 1.0))
+    row("sim_link_alpha_us", fit.alpha * 1e6,
+        f"beta^-1={fit.inv_beta / 1e9:.2f}GB/s")
+    return link
+
+
+# -- 1. measured overlap fraction --------------------------------------------
+
+def bench_overlap_fraction():
+    print("\n== put_nbi -> compute -> quiet overlap fraction ==")
+    ctx = sim_ctx(N, TOPO)
+    ring = [(i, (i + 1) % N) for i in range(N)]
+    x = _sized(1 << 18)
+    w = jnp.asarray(np.random.RandomState(7).randn(256, 256)
+                    .astype(np.float32))
+
+    def comm_only(v):
+        f = ctx.put_nbi(v, ring)
+        (out,) = ctx.quiet(f)
+        return out
+
+    def compute_only(m):
+        acc = m
+        for _ in range(8):
+            acc = jnp.tanh(acc @ m)
+        return acc
+
+    def overlapped(v, m):
+        f = ctx.put_nbi(v, ring)          # DMA launch
+        acc = compute_only(m)             # independent compute window
+        (out,) = ctx.quiet(f)             # completion pin
+        return out, acc
+
+    t_comm = _time(comm_only, x, warmup=3, iters=24)
+    t_comp = _time(compute_only, w, warmup=3, iters=24)
+    t_both = _time(overlapped, x, w, warmup=3, iters=24)
+    frac = (t_comm + t_comp - t_both) / max(min(t_comm, t_comp), 1e-12)
+    row("overlap_comm_us", t_comm * 1e6, "put_nbi+quiet alone")
+    row("overlap_compute_us", t_comp * 1e6, "8x tanh-matmul alone")
+    row("overlap_both_us", t_both * 1e6, "put_nbi -> compute -> quiet")
+    row("overlap_fraction", frac,
+        "measured; 1.0 = cheaper phase fully hidden (the e-DMA target), "
+        "~0 = serialized substrate, <0 = combined-program dispatch "
+        "overhead on this substrate")
+
+
+# -- 2. pipelined vs monolithic ----------------------------------------------
+
+def bench_pipelined(sim_link: abmodel.LinkModel):
+    print("\n== pipelined vs monolithic (same Schedule objects; "
+          f"chunks={PIPE_CHUNKS}) ==")
+    ctx = sim_ctx(N, TOPO)
+    for nbytes in (4096, 1 << 16, 1 << 20, 1 << 22):
+        x = _sized(nbytes)
+        sched = coll.allreduce_schedule(N, float(nbytes), "ring")
+        t_mono = _time(lambda v: ctx.to_all(v, "sum", algorithm="ring"), x)
+        t_pipe = _time(lambda v: ctx.to_all(v, "sum", algorithm="ring",
+                                            pipeline_chunks=PIPE_CHUNKS), x)
+        # identical bits, by construction — verify on the way through
+        same = np.array_equal(
+            np.asarray(ctx.to_all(x, "sum", algorithm="ring")),
+            np.asarray(ctx.to_all(x, "sum", algorithm="ring",
+                                  pipeline_chunks=PIPE_CHUNKS)))
+        m_mono = sched.time(TOPO, NOC)
+        m_pipe = sched.pipelined_time(PIPE_CHUNKS, TOPO, NOC)
+        row(f"allreduce_ring_{nbytes}B_measured", t_mono * 1e6,
+            f"pipelined={t_pipe * 1e6:.2f}us bitwise_equal={same}")
+        row(f"allreduce_ring_{nbytes}B_noc_model", m_mono * 1e6,
+            f"pipelined={m_pipe * 1e6:.2f}us "
+            f"speedup=x{m_mono / m_pipe:.2f}")
+
+    # modeled cross-over: smallest size where chunked execution wins
+    for name, build in (("broadcast", lambda b: coll.broadcast_schedule(N, b)),
+                        ("allreduce_ring",
+                         lambda b: coll.allreduce_schedule(N, b, "ring"))):
+        for link, lname in ((NOC, "noc"), (sim_link, "simfit")):
+            lo, hi = 8.0, float(1 << 24)
+            win = (lambda b: build(b).pipelined_time(PIPE_CHUNKS, TOPO, link)
+                   < build(b).time(TOPO, link))
+            if win(lo) or not win(hi):
+                row(f"{name}_pipe_crossover_{lname}_B", float("nan"),
+                    f"WARN_no_crossover_in[{lo},{hi}]B")
+                continue
+            while hi - lo > 1:
+                mid = (lo + hi) // 2
+                lo, hi = (lo, mid) if win(mid) else (mid, hi)
+            row(f"{name}_pipe_crossover_{lname}_B", hi,
+                f"pipelined(x{PIPE_CHUNKS}) wins >= {int(hi)}B")
+
+
+# -- 3. chunk-count selection ------------------------------------------------
+
+def bench_selector():
+    print("\n== choose_schedule (algorithm, n_chunks) selection ==")
+    for nbytes in (64, 4096, 1 << 20, 1 << 24):
+        algo, chunks = coll.choose_schedule(N, float(nbytes), TOPO, NOC)
+        t = coll.allreduce_schedule(N, float(nbytes), algo)\
+            .pipelined_time(chunks, TOPO, NOC)
+        row(f"choose_schedule_{nbytes}B", t * 1e6, f"{algo} chunks={chunks}")
+    # the selector must take chunked schedules above its own cross-over
+    small = coll.choose_schedule(N, 64.0, TOPO, NOC)
+    big = coll.choose_schedule(N, float(1 << 24), TOPO, NOC)
+    ok = small[1] == 1 and big[1] > 1
+    row("selector_chunks_smallVbig", 0.0,
+        f"small={small} big={big} {'OK' if ok else 'WARN_mismatch'}")
+
+
+def main():
+    print("name,us,derived")
+    link = fit_sim_link()
+    bench_overlap_fraction()
+    bench_pipelined(link)
+    bench_selector()
+
+
+if __name__ == "__main__":
+    main()

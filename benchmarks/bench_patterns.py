@@ -24,33 +24,16 @@ payload scaling, stage counts) matches what actually executes.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.core import abmodel, collectives as coll, sim_ctx
 from repro.core.netops import SimNetOps
 from repro.core.topology import epiphany3
+
+from ._util import sized, time_fn as _time
 
 TOPO = epiphany3()
 N = TOPO.n_pes
 LINK = abmodel.EPIPHANY_NOC
 ROWS: list[tuple] = []
-
-
-def _time(fn, *args, warmup=2, iters=8):
-    jitted = jax.jit(fn)
-    out = jitted(*args)
-    jax.block_until_ready(out)
-    for _ in range(warmup - 1):
-        jax.block_until_ready(jitted(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jitted(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters  # seconds
 
 
 def row(name, us, derived):
@@ -59,9 +42,7 @@ def row(name, us, derived):
 
 
 def _sized(nbytes, n=N):
-    w = max(1, int(nbytes) // 4)
-    return jnp.asarray(np.random.RandomState(0).randn(n, w)
-                       .astype(np.float32))
+    return sized(nbytes, n)
 
 
 # -- 1. fit the SIM substrate's own alpha-beta from single stages ------------

@@ -84,3 +84,34 @@ def modeled_collective_time(stages: list[tuple[float, float]],
     """Sum of (nbytes, hops) stage costs — collectives built from ppermute
     stages are serialized, so stage times add."""
     return sum(link.time(b, h) for b, h in stages)
+
+
+def modeled_pipelined_time(stages: list[tuple[float, float]], n_chunks: int,
+                           link: LinkModel = ICI_V5E) -> float:
+    """Chunked (double-buffered) schedule execution time (DESIGN.md §10).
+
+    The payload of every stage is split into `n_chunks` pieces and stage k
+    of chunk i overlaps stage k+1 of chunk i-1 — the e-DMA discipline of
+    the paper's put pipeline.  The pipeline fills in one chunk's worth of
+    stage times and drains in (C-1) repeats of the bottleneck stage:
+
+        T(C) = sum_k t_k(b_k / C)  +  (C - 1) * max_k t_k(b_k / C)
+
+    Each chunk pays the full per-message alpha and hop latency at every
+    stage, so small messages prefer C=1 (monolithic); for large messages
+    the bandwidth term dominates and T(C) ~ (S + C - 1)/(S*C) of the
+    monolithic time — the classic pipelined-tree gain."""
+    if n_chunks <= 1 or not stages:
+        return modeled_collective_time(stages, link)
+    per = [link.time(b / n_chunks, h) for b, h in stages]
+    return sum(per) + (n_chunks - 1) * max(per)
+
+
+def choose_chunks(stages: list[tuple[float, float]],
+                  link: LinkModel = ICI_V5E, max_chunks: int = 32) -> int:
+    """Pick the chunk count (power of two, 1 = monolithic) minimizing the
+    modeled pipelined time of a schedule's (bytes, hops) stage costs."""
+    candidates = [1 << k for k in range(max(1, max_chunks).bit_length())
+                  if (1 << k) <= max_chunks]
+    return min(candidates,
+               key=lambda c: modeled_pipelined_time(stages, c, link))

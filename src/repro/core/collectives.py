@@ -168,6 +168,38 @@ def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
                key=lambda a: build(n, nbytes, algorithm=a).time(topo, link))
 
 
+# Upper bound on pipeline depth "auto" will consider; deeper pipelines pay
+# one more per-stage alpha per chunk for ever-shrinking drain savings.
+PIPELINE_MAX_CHUNKS = 16
+
+
+def choose_schedule(n: int, nbytes: float, topo=None, link=None,
+                    collective: str = "allreduce",
+                    max_chunks: int = PIPELINE_MAX_CHUNKS
+                    ) -> tuple[str, int]:
+    """choose_algorithm extended over the pipelining axis: price every
+    candidate (algorithm, chunk-count) pair with the alpha-beta model —
+    `abmodel.modeled_pipelined_time` for chunked, eq. 1 for monolithic —
+    and return the cheapest ``(algorithm, n_chunks)``.
+
+    n_chunks == 1 means monolithic execution; above the modeled pipelining
+    cross-over (where the drained bandwidth saving outweighs the per-chunk
+    alpha) the chunk count grows toward `max_chunks`."""
+    from . import abmodel
+    if n <= 1:
+        return "ring", 1
+    link = link if link is not None else abmodel.ICI_V5E
+    build = _SELECTABLE[collective]
+    best, best_t = ("ring", 1), math.inf
+    for algo in ["ring"] + (["rd"] if _is_pow2(n) else []):
+        cost = build(n, nbytes, algorithm=algo).cost(topo)
+        c = abmodel.choose_chunks(cost, link, max_chunks=max_chunks)
+        t = abmodel.modeled_pipelined_time(cost, c, link)
+        if t < best_t:
+            best, best_t = (algo, c), t
+    return best
+
+
 # ---------------------------------------------------------------------------
 # cost descriptors — thin views over the same schedules that execute
 # ---------------------------------------------------------------------------
@@ -194,6 +226,90 @@ def alltoall_stages(n: int, nbytes_total: float, topo=None):
 
 
 # ---------------------------------------------------------------------------
+# pipelined (chunked, double-buffered) schedule execution — DESIGN.md §10
+# ---------------------------------------------------------------------------
+# Large payloads split into static contiguous pieces; the executor issues
+# stage k of piece c at pipeline step k + c, so stage k of chunk i overlaps
+# stage k+1 of chunk i-1 (the paper's e-DMA double-buffering discipline).
+# Pieces are dataflow-independent and every stage op (ppermute, select,
+# elementwise combine, static block slicing) commutes with contiguous
+# slicing of the payload, so pipelined execution is BIT-IDENTICAL to the
+# eager/monolithic path — same ops, same per-element reduction order.
+
+def _chunk_bounds(width: int, n_chunks) -> list[tuple[int, int]]:
+    """Static contiguous piece boundaries (roughly equal; always at least
+    one piece, so zero-width payloads still run a single empty piece)."""
+    c = max(1, min(int(n_chunks), int(width)))
+    if width <= 0:
+        return [(0, 0)]
+    edges = np.linspace(0, width, c + 1).astype(int)
+    return [(int(lo), int(hi)) for lo, hi in zip(edges[:-1], edges[1:])
+            if hi > lo]
+
+
+def _software_pipeline(pieces, n_stages: int, stage_fn):
+    """Run `stage_fn(piece_idx, stage_idx, state) -> state` over all pieces
+    in pipelined issue order: step t advances piece c through stage t - c.
+    Fill takes S steps, drain C-1 — the (S + C - 1)-slot pipeline that
+    `abmodel.modeled_pipelined_time` prices."""
+    states = list(pieces)
+    n_pieces = len(states)
+    for t in range(n_stages + n_pieces - 1):
+        for c in range(n_pieces):
+            k = t - c
+            if 0 <= k < n_stages:
+                states[c] = stage_fn(c, k, states[c])
+    return states
+
+
+def _resolve_chunks(pipeline_chunks, schedule: Schedule, topo=None,
+                    link=None) -> int:
+    """None/1 -> monolithic; "auto" -> abmodel.choose_chunks on the
+    executing schedule's own cost descriptor; an int passes through."""
+    if pipeline_chunks in (None, 0, 1):
+        return 1
+    if pipeline_chunks == "auto":
+        from . import abmodel
+        link = link if link is not None else abmodel.ICI_V5E
+        return abmodel.choose_chunks(schedule.cost(topo), link,
+                                     max_chunks=PIPELINE_MAX_CHUNKS)
+    return int(pipeline_chunks)
+
+
+def _slice_axis(v, lo: int, hi: int, ax: int):
+    sl = [slice(None)] * v.ndim
+    sl[ax] = slice(lo, hi)
+    return v[tuple(sl)]
+
+
+def _flat_pieces(net: NetOps, x, n_chunks):
+    """Flatten the per-PE payload and cut it into static contiguous pieces;
+    returns (pieces, bounds, restore)."""
+    sim = isinstance(net, SimNetOps)
+    shape = x.shape
+    flat = x.reshape((shape[0], -1) if sim else (-1,))
+    bounds = _chunk_bounds(flat.shape[-1], n_chunks)
+    pieces = [flat[..., lo:hi] for lo, hi in bounds]
+
+    def restore(parts):
+        return jnp.concatenate(parts, axis=-1).reshape(shape)
+
+    return pieces, bounds, restore
+
+
+def _interleave_blocks(outs, bounds, n: int, ax: int):
+    """Inverse of within-block chunking: each per-piece output carries `n`
+    blocks of its piece's width along `ax`; reassemble the n full blocks
+    (block i = concat over pieces of each piece's block i)."""
+    cols = []
+    for i in range(n):
+        for out, (lo, hi) in zip(outs, bounds):
+            w = hi - lo
+            cols.append(_slice_axis(out, i * w, (i + 1) * w, ax))
+    return jnp.concatenate(cols, axis=ax)
+
+
+# ---------------------------------------------------------------------------
 # barrier
 # ---------------------------------------------------------------------------
 
@@ -215,12 +331,24 @@ def barrier(net: NetOps, token=None):
 # broadcast (farthest-first binomial tree)
 # ---------------------------------------------------------------------------
 
-def broadcast(net: NetOps, x, root: int = 0):
+def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
+              topo=None, link=None):
     n = net.n_pes
     if n == 1:
         return x
+    sched = broadcast_schedule(n, _payload_bytes(net, x), root)
+    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link)
+    if chunks > 1:
+        pieces, _, restore = _flat_pieces(net, x, chunks)
+
+        def stage(c, k, buf):
+            st = sched.stages[k]
+            recv = net.ppermute(buf, st.pattern)
+            return net.select(st.pattern, recv, buf)
+
+        return restore(_software_pipeline(pieces, len(sched.stages), stage))
     buf = x
-    for st in broadcast_schedule(n, _payload_bytes(net, x), root).stages:
+    for st in sched.stages:
         recv = net.ppermute(buf, st.pattern)
         buf = net.select(st.pattern, recv, buf)
     return buf
@@ -230,23 +358,36 @@ def broadcast(net: NetOps, x, root: int = 0):
 # fcollect / collect (allgather)
 # ---------------------------------------------------------------------------
 
-def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None):
+def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
+             pipeline_chunks=None, topo=None, link=None):
     """Concatenate equal-size blocks from all PEs along `axis`.
 
     Recursive doubling (log2 N stages, doubling message size) when N is a
-    power of two, ring otherwise — the paper's fcollect/collect split."""
+    power of two, ring otherwise — the paper's fcollect/collect split.
+    `pipeline_chunks` > 1 executes the schedule chunked/double-buffered
+    (bit-identical; DESIGN.md §10)."""
     n = net.n_pes
     if n == 1:
         return x
     algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    nbytes = _payload_bytes(net, x)
+    chunks = _resolve_chunks(pipeline_chunks,
+                             fcollect_schedule(n, nbytes, algo), topo, link)
     if algo == "rd":
-        return _fcollect_rd(net, x, axis)
-    return _collect_ring(net, x, axis)
+        return _fcollect_rd(net, x, axis, n_chunks=chunks)
+    return _collect_ring(net, x, axis, n_chunks=chunks)
 
 
-def collect(net: NetOps, x, axis: int = 0):
+def collect(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
+            topo=None, link=None):
     """The paper's linear-scaling ring collect."""
-    return _collect_ring(net, x, axis)
+    n = net.n_pes
+    if n == 1:
+        return x
+    chunks = _resolve_chunks(
+        pipeline_chunks,
+        fcollect_schedule(n, _payload_bytes(net, x), "ring"), topo, link)
+    return _collect_ring(net, x, axis, n_chunks=chunks)
 
 
 def _out_zeros_like(x, axis, n, pe_leading):
@@ -256,7 +397,7 @@ def _out_zeros_like(x, axis, n, pe_leading):
     return jnp.zeros(shp, x.dtype)
 
 
-def _fcollect_rd(net: NetOps, x, axis: int):
+def _fcollect_rd(net: NetOps, x, axis: int, n_chunks: int = 1):
     n = net.n_pes
     blk = x.shape[axis + (1 if isinstance(net, SimNetOps) else 0)]
     buf = _out_zeros_like(x, axis, n, isinstance(net, SimNetOps))
@@ -268,7 +409,17 @@ def _fcollect_rd(net: NetOps, x, axis: int):
         return lax.dynamic_update_slice(b, v, tuple(starts))
 
     buf = _lmap(net, place, buf, x, pe)
-    for st in fcollect_schedule(n, _payload_bytes(net, x), "rd").stages:
+    stages = fcollect_schedule(n, _payload_bytes(net, x), "rd").stages
+    if n_chunks > 1:
+        # every stage is elementwise (ppermute + add of disjoint regions),
+        # so pipelining slices the filled output buffer directly
+        pieces, _, restore = _flat_pieces(net, buf, n_chunks)
+
+        def stage(c, k, b):
+            return b + net.ppermute(b, stages[k].pattern)
+
+        return restore(_software_pipeline(pieces, len(stages), stage))
+    for st in stages:
         recv = net.ppermute(buf, st.pattern)
         buf = buf + recv  # disjoint filled regions, zeros elsewhere
     return buf
@@ -294,21 +445,38 @@ def _take_blocks(net: NetOps, x, idx, nblk: int, axis: int):
     return _lmap(net, one, x, idx)
 
 
-def _collect_ring(net: NetOps, x, axis: int):
+def _collect_ring(net: NetOps, x, axis: int, n_chunks: int = 1):
     n = net.n_pes
     if RING_SCHEDULE == "dus":
         return _collect_ring_dus(net, x, axis)
     pe = net.my_pe()
-    parts = [x]
-    cur = x
-    for st in fcollect_schedule(n, _payload_bytes(net, x), "ring").stages:
-        cur = net.ppermute(cur, st.pattern)
-        parts.append(cur)                   # part t holds block (pe - t)
     sim = isinstance(net, SimNetOps)
-    stacked = jnp.concatenate(parts, axis=axis + (1 if sim else 0))
+    ax = axis + (1 if sim else 0)
+    stages = fcollect_schedule(n, _payload_bytes(net, x), "ring").stages
     # out block i = stacked part (pe - i) mod n
     idx = (pe[..., None] - jnp.arange(n)) % n if sim \
         else (pe - jnp.arange(n)) % n
+    if n_chunks > 1:
+        # chunk WITHIN the per-PE block along `axis` so each piece runs the
+        # identical ring; block order is restored piece-wise and the full
+        # blocks reassembled by interleaving
+        bounds = _chunk_bounds(x.shape[ax], n_chunks)
+        pieces = [[_slice_axis(x, lo, hi, ax)] for lo, hi in bounds]
+
+        def stage(c, k, parts):
+            return parts + [net.ppermute(parts[-1], stages[k].pattern)]
+
+        outs = []
+        for parts in _software_pipeline(pieces, len(stages), stage):
+            stacked_c = jnp.concatenate(parts, axis=ax)
+            outs.append(_take_blocks(net, stacked_c, idx, n, axis))
+        return _interleave_blocks(outs, bounds, n, ax)
+    parts = [x]
+    cur = x
+    for st in stages:
+        cur = net.ppermute(cur, st.pattern)
+        parts.append(cur)                   # part t holds block (pe - t)
+    stacked = jnp.concatenate(parts, axis=ax)
     return _take_blocks(net, stacked, idx, n, axis)
 
 
@@ -356,7 +524,8 @@ RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: the old hand-tuned switch point,
 
 
 def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
-              algorithm: str | None = None, topo=None, link=None):
+              algorithm: str | None = None, topo=None, link=None,
+              pipeline_chunks=None):
     """shmem_TYPE_OP_to_all.
 
     Algorithm selection generalizes the paper's PE-count switch (§3.6:
@@ -365,24 +534,113 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
     (`choose_algorithm`): recursive doubling moves the FULL buffer log2(N)
     times (alpha-optimal), the ring moves ~2x the buffer total
     (bandwidth-optimal), so large payloads take the ring even at
-    power-of-two PE counts.  Explicit "rd"/"ring" override."""
+    power-of-two PE counts.  Explicit "rd"/"ring" override.
+
+    `pipeline_chunks` > 1 executes the chosen schedule chunked and
+    double-buffered (bit-identical to monolithic; DESIGN.md §10);
+    "auto" for BOTH knobs prices every (algorithm, chunk-count) pair
+    (`choose_schedule`) and runs the cheapest."""
     n = net.n_pes
     if n == 1:
         return x
     fn = combine or OPS[op]
-    if algorithm == "auto":
-        algo = choose_algorithm(n, _payload_bytes(net, x), topo, link)
-    elif algorithm is None:
-        algo = "rd" if _is_pow2(n) else "ring"
+    nbytes = _payload_bytes(net, x)
+    if algorithm == "auto" and pipeline_chunks == "auto":
+        algo, chunks = choose_schedule(n, nbytes, topo, link)
     else:
-        algo = algorithm
+        if algorithm == "auto":
+            algo = choose_algorithm(n, nbytes, topo, link)
+        elif algorithm is None:
+            algo = "rd" if _is_pow2(n) else "ring"
+        else:
+            algo = algorithm
+        chunks = _resolve_chunks(pipeline_chunks,
+                                 allreduce_schedule(n, nbytes, algo),
+                                 topo, link)
     if algo == "rd":
-        for st in allreduce_schedule(n, _payload_bytes(net, x), "rd").stages:
+        stages = allreduce_schedule(n, nbytes, "rd").stages
+        if chunks > 1:
+            return jax.tree.map(
+                lambda v: _allreduce_rd_pipelined(net, v, fn, stages, chunks),
+                x)
+        for st in stages:
             recv = net.ppermute(x, st.pattern)
             x = jax.tree.map(fn, x, recv)
         return x
+    if chunks > 1:
+        return _allreduce_ring_pipelined(net, x, fn, chunks)
     rs, shape_info = _reduce_scatter_ring(net, x, fn)
     return allgather_unpad(net, rs, shape_info)
+
+
+def _allreduce_rd_pipelined(net: NetOps, x, fn, stages, n_chunks: int):
+    """Recursive doubling is elementwise per stage (ppermute + combine), so
+    pipelining slices the flat payload directly."""
+    pieces, _, restore = _flat_pieces(net, x, n_chunks)
+
+    def stage(c, k, buf):
+        return fn(buf, net.ppermute(buf, stages[k].pattern))
+
+    return restore(_software_pipeline(pieces, len(stages), stage))
+
+
+def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int):
+    """Ring reduce-scatter + allgather, chunked WITHIN the owned 1/n block
+    so every element keeps its monolithic block index — and therefore its
+    exact reduction order (bit-identical to the eager path).  The fused
+    pipeline lets chunk i's allgather stages overlap chunk i+1's
+    reduce-scatter stages."""
+    n = net.n_pes
+    sim = isinstance(net, SimNetOps)
+    orig_shape = x.shape[1:] if sim else x.shape
+    size = int(np.prod(orig_shape))
+    chunk = -(-size // n)
+    padded = chunk * n
+    pe = net.my_pe()
+
+    def flatpad(v):
+        f = v.reshape(-1)
+        return jnp.pad(f, (0, padded - size))
+
+    buf = _lmap(net, flatpad, x)
+    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
+        else (pe + jnp.arange(n)) % n
+    r = _take_blocks(net, buf, idx, n, 0)
+
+    nbytes = _payload_bytes(net, x)
+    rs = reduce_scatter_schedule(n, nbytes).stages
+    ag = allgather_schedule(n, float(padded * buf.dtype.itemsize)).stages
+    bounds = _chunk_bounds(chunk, n_chunks)
+
+    def piece_of(t: int, lo: int, hi: int):
+        base = t * chunk
+        return r[..., base + lo:base + hi]
+
+    def stage(c, k, state):
+        lo, hi = bounds[c]
+        cur, parts = state
+        if k < len(rs):
+            j = k + 1
+            cur = net.ppermute(cur, rs[k].pattern)
+            cur = fn(piece_of(n - j, lo, hi), cur)
+            return (cur, (cur,) if k == len(rs) - 1 else parts)
+        cur = net.ppermute(cur, ag[k - len(rs)].pattern)
+        return (cur, parts + (cur,))
+
+    init = [(piece_of(0, lo, hi), ()) for lo, hi in bounds]
+    finals = _software_pipeline(init, len(rs) + len(ag), stage)
+    idx2 = (pe[..., None] + 1 - jnp.arange(n)) % n if sim \
+        else (pe + 1 - jnp.arange(n)) % n
+    outs = []
+    for _, parts in finals:
+        stacked_c = jnp.concatenate(parts, axis=-1)
+        outs.append(_take_blocks(net, stacked_c, idx2, n, 0))
+    out = _interleave_blocks(outs, bounds, n, -1)
+
+    def unpad(b):
+        return b[:size].reshape(orig_shape)
+
+    return _lmap(net, unpad, out)
 
 
 def reduce_scatter(net: NetOps, x, op: str = "sum",
@@ -470,12 +728,15 @@ _allgather_unpad = allgather_unpad
 # alltoall (pairwise exchange — paper Fig. 9)
 # ---------------------------------------------------------------------------
 
-def alltoall(net: NetOps, x, axis: int = 0):
+def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
+             topo=None, link=None):
     """out[src-block] = x_src[my-block]; x's `axis` dim = n_pes * block.
 
     Static schedule (§Perf P1): one pre-rotation makes every stage's send
     block a static slice; received parts concatenate in ring order and one
-    post-gather restores block order — no per-stage dynamic updates."""
+    post-gather restores block order — no per-stage dynamic updates.
+    `pipeline_chunks` > 1 chunks each block's payload and pipelines the
+    pairwise sends (bit-identical; DESIGN.md §10)."""
     n = net.n_pes
     if n == 1:
         return x
@@ -490,20 +751,37 @@ def alltoall(net: NetOps, x, axis: int = 0):
         else (pe + jnp.arange(n)) % n
     r = _take_blocks(net, x, idx, n, axis)
     blk = dim // n
+    sched = alltoall_schedule(n, _payload_bytes(net, x))
+    out_idx = (pe[..., None] - jnp.arange(n)) % n if sim \
+        else (pe - jnp.arange(n)) % n
 
-    def static_blk(v, t):
+    def static_blk(v, t, lo=0, hi=blk):
         sl = [slice(None)] * v.ndim
-        sl[ax] = slice(t * blk, (t + 1) * blk)
+        sl[ax] = slice(t * blk + lo, t * blk + hi)
         return v[tuple(sl)]
 
+    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link)
+    if chunks > 1:
+        bounds = _chunk_bounds(blk, chunks)
+
+        def stage(c, k, parts):
+            lo, hi = bounds[c]
+            st = sched.stages[k]
+            return parts + (net.ppermute(static_blk(r, k + 1, lo, hi),
+                                         st.pattern),)
+
+        init = [(static_blk(r, 0, lo, hi),) for lo, hi in bounds]
+        outs = []
+        for parts in _software_pipeline(init, len(sched.stages), stage):
+            stacked_c = jnp.concatenate(parts, axis=ax)
+            outs.append(_take_blocks(net, stacked_c, out_idx, n, axis))
+        return _interleave_blocks(outs, bounds, n, ax)
+
     parts = [static_blk(r, 0)]          # own block: out[pe] = x_pe[pe]
-    sched = alltoall_schedule(n, _payload_bytes(net, x))
     for j, st in enumerate(sched.stages, start=1):
         recv = net.ppermute(static_blk(r, j), st.pattern)
         parts.append(recv)              # part t = out-block (pe - t) mod n
     stacked = jnp.concatenate(parts, axis=ax)
-    out_idx = (pe[..., None] - jnp.arange(n)) % n if sim \
-        else (pe - jnp.arange(n)) % n
     return _take_blocks(net, stacked, out_idx, n, axis)
 
 

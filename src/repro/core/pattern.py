@@ -288,5 +288,14 @@ class Schedule:
         link = link if link is not None else abmodel.ICI_V5E
         return abmodel.modeled_collective_time(self.cost(topo), link)
 
+    def pipelined_time(self, n_chunks: int,
+                       topo: MeshTopology | None = None, link=None) -> float:
+        """Modeled wall time when executed chunked/double-buffered in
+        `n_chunks` pieces (stage k of chunk i overlapping stage k+1 of
+        chunk i-1); n_chunks=1 is the monolithic time."""
+        from . import abmodel
+        link = link if link is not None else abmodel.ICI_V5E
+        return abmodel.modeled_pipelined_time(self.cost(topo), n_chunks, link)
+
     def total_bytes(self) -> float:
         return sum(st.nbytes for st in self.stages)

@@ -10,11 +10,14 @@ The OpenSHMEM 1.3 routine families the paper implements, in JAX:
                   alltoall                                §3.6
   locks           set_lock / test_lock / clear_lock       §3.7
 
-Semantics notes (DESIGN.md §6): gets are owner-pushed (the paper's
+Semantics notes (DESIGN.md §6, §10): gets are owner-pushed (the paper's
 IPI-get is the *only* get on this substrate); atomics are deterministic
-PE-ordered; `quiet` is an optimization barrier (the DMA-status spin-wait
-analogue — it pins completion of outstanding non-blocking ops before
-anything that follows).
+PE-ordered.  Non-blocking RMA runs on a pending-op engine (the e-DMA
+descriptor queue analogue): `put_nbi`/`get_nbi` enqueue `Future`s carrying
+their compiled pattern and payload size; `quiet` drains and COMPLETES all
+pending ops in issue order (the DMA-status spin-wait); `fence` imposes
+per-destination-PE ordering on the pending queue WITHOUT completing it
+(OpenSHMEM 1.3 distinguishes the two — §10 documents the mapping).
 """
 from __future__ import annotations
 
@@ -34,15 +37,38 @@ from .topology import MeshTopology
 
 @dataclasses.dataclass
 class Future:
-    """Handle for a non-blocking RMA (put_nbi/get_nbi).
+    """Pending-op record of a non-blocking RMA (put_nbi/get_nbi) — one
+    entry of the context's DMA descriptor queue (DESIGN.md §10).
 
-    The value is lazily scheduled by XLA (the 'DMA engine'); `quiet()`
-    fences it.  Reading .value before quiet() is legal in JAX but forfeits
-    the ordering guarantee — exactly like reading a DMA target buffer
-    before shmem_quiet on the Epiphany."""
+    The value is lazily scheduled by XLA (the 'e-DMA engine'); `quiet()`
+    completes it, `fence()` orders it against later same-destination ops
+    without completing it.  Reading .value before quiet() is legal in JAX
+    but forfeits the ordering guarantee — exactly like reading a DMA
+    target buffer before shmem_quiet on the Epiphany.
+
+    pattern : the compiled pattern that executes (for a get, the
+              owner->requester push of the IPI-get);
+    op      : "put" | "get";
+    nbytes  : per-PE payload bytes the op moves (cost accounting);
+    seq     : issue order within the owning context (monotonic)."""
 
     value: Any
+    pattern: CommPattern | None = None
+    op: str = "put"
+    nbytes: float = 0.0
+    seq: int = -1
     _done: bool = False
+
+    @property
+    def done(self) -> bool:
+        """True once quiet() has pinned this op's completion."""
+        return self._done
+
+    def target_pes(self) -> tuple[int, ...]:
+        """Destination PEs the op writes to — what fence() orders by."""
+        if self.pattern is None:
+            return ()
+        return tuple(int(i) for i in np.nonzero(self.pattern.dst_mask)[0])
 
 
 class ShmemContext:
@@ -58,6 +84,7 @@ class ShmemContext:
         # benchmarks' derived column agree on constants.
         self.link = link
         self._pending: list[Future] = []
+        self._op_seq = 0
 
     # -- setup / query ------------------------------------------------------
     @property
@@ -120,21 +147,49 @@ class ShmemContext:
     def iget(self, x, pattern, **kw):
         return self.iput(x, self._owner_push(pattern), **kw)
 
-    def put_nbi(self, x, pattern, local=None) -> Future:
-        f = Future(self.put(x, pattern, local=local))
+    # -- pending-op engine (the e-DMA descriptor queue; DESIGN.md §10) -------
+    def _enqueue(self, value, pattern: CommPattern, op: str, payload) -> Future:
+        nbytes = float(sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(payload)))
+        if isinstance(self.net, SimNetOps):
+            nbytes /= self.n_pes            # leading PE axis is not payload
+        f = Future(value, pattern=pattern, op=op, nbytes=nbytes,
+                   seq=self._op_seq)
+        self._op_seq += 1
         self._pending.append(f)
         return f
+
+    @property
+    def pending_count(self) -> int:
+        """Outstanding non-blocking ops not yet completed by quiet()."""
+        return len(self._pending)
+
+    def pending_ops(self) -> tuple[Future, ...]:
+        return tuple(self._pending)
+
+    def put_nbi(self, x, pattern, local=None) -> Future:
+        p = self.compile(pattern)
+        return self._enqueue(self.put(x, p, local=local), p, "put", x)
 
     def get_nbi(self, x, pattern, local=None) -> Future:
-        f = Future(self.get(x, pattern, local=local))
-        self._pending.append(f)
-        return f
+        p = self._owner_push(pattern)
+        return self._enqueue(self.put(x, p, local=local), p, "get", x)
 
     def quiet(self, *futures: Future):
-        """Fence outstanding non-blocking ops (DMA-idle spin-wait analogue)."""
+        """shmem_quiet: drain the pending queue — pin COMPLETION of all
+        outstanding non-blocking ops, in issue order, before anything that
+        consumes the returned values (the DMA-idle spin-wait analogue).
+
+        Completion here is `lax.optimization_barrier` over the pending
+        values: XLA may not sink the transfers past any consumer of the
+        fenced results.  With explicit `futures`, only those ops are
+        completed (per-handle quiet); otherwise the whole queue drains and
+        empties.  Drained futures are marked done and their .value is
+        replaced by the fenced value."""
         fs = list(futures) or self._pending
         if not fs:
             return ()
+        fs = sorted(fs, key=lambda f: f.seq)     # completion in issue order
         vals = [f.value for f in fs]
         fenced = lax.optimization_barrier(tuple(vals))
         for f, v in zip(fs, fenced):
@@ -143,8 +198,33 @@ class ShmemContext:
         return fenced
 
     def fence(self):
-        """Per-target ordering; on this substrate identical to quiet()."""
-        return self.quiet()
+        """shmem_fence: per-destination ordering WITHOUT completion
+        (OpenSHMEM 1.3 §9.10; the paper's dma-ordering wait).
+
+        Each pending op's value is data-chained after every earlier
+        pending op that writes an overlapping destination PE, so XLA
+        cannot deliver two same-target puts out of issue order — but the
+        ops stay pending (only quiet() completes them and empties the
+        queue).  Ops to disjoint PE sets remain unordered, exactly the
+        freedom OpenSHMEM grants.  Returns the (order-chained) pending
+        values; () when the queue is empty."""
+        if not self._pending:
+            return ()
+        last_for_pe: dict[int, Future] = {}
+        for f in sorted(self._pending, key=lambda x: x.seq):
+            targets = f.target_pes() or tuple(range(self.n_pes))
+            deps: list[Future] = []
+            for pe in targets:
+                d = last_for_pe.get(pe)
+                if d is not None and d is not f and d not in deps:
+                    deps.append(d)
+            if deps:
+                chained = lax.optimization_barrier(
+                    tuple([f.value] + [d.value for d in deps]))
+                f.value = chained[0]
+            for pe in targets:
+                last_for_pe[pe] = f
+        return tuple(f.value for f in self._pending)
 
     # -- collectives ----------------------------------------------------------
     def barrier_all(self, token=None):
@@ -158,27 +238,40 @@ class ShmemContext:
     def barrier(self, token=None):
         return coll.barrier(self.net, token)
 
-    def broadcast(self, x, root: int = 0):
-        return coll.broadcast(self.net, x, root)
+    def broadcast(self, x, root: int = 0, pipeline_chunks=None):
+        return coll.broadcast(self.net, x, root,
+                              pipeline_chunks=pipeline_chunks,
+                              topo=self.topo, link=self.link)
 
-    def collect(self, x, axis: int = 0):
-        return coll.collect(self.net, x, axis)
+    def collect(self, x, axis: int = 0, pipeline_chunks=None):
+        return coll.collect(self.net, x, axis,
+                            pipeline_chunks=pipeline_chunks,
+                            topo=self.topo, link=self.link)
 
-    def fcollect(self, x, axis: int = 0, algorithm=None):
-        return coll.fcollect(self.net, x, axis, algorithm)
+    def fcollect(self, x, axis: int = 0, algorithm=None,
+                 pipeline_chunks=None):
+        return coll.fcollect(self.net, x, axis, algorithm,
+                             pipeline_chunks=pipeline_chunks,
+                             topo=self.topo, link=self.link)
 
-    def to_all(self, x, op: str = "sum", algorithm=None):
+    def to_all(self, x, op: str = "sum", algorithm=None,
+               pipeline_chunks=None):
         """shmem_TYPE_OP_to_all.  algorithm="auto" prices the candidate
         schedules against this context's topology and link model
-        (DESIGN.md §9)."""
+        (DESIGN.md §9); pipeline_chunks="auto" additionally prices chunked
+        double-buffered execution and picks the chunk count (§10) —
+        bit-identical to monolithic, whatever is selected."""
         return coll.allreduce(self.net, x, op, algorithm=algorithm,
-                              topo=self.topo, link=self.link)
+                              topo=self.topo, link=self.link,
+                              pipeline_chunks=pipeline_chunks)
 
     def reduce_scatter(self, x, op: str = "sum"):
         return coll.reduce_scatter(self.net, x, op)
 
-    def alltoall(self, x, axis: int = 0):
-        return coll.alltoall(self.net, x, axis)
+    def alltoall(self, x, axis: int = 0, pipeline_chunks=None):
+        return coll.alltoall(self.net, x, axis,
+                             pipeline_chunks=pipeline_chunks,
+                             topo=self.topo, link=self.link)
 
     # -- atomics (§3.5) ---------------------------------------------------------
     def testset(self, var, value):

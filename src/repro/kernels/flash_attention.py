@@ -30,8 +30,12 @@ NEG_INF = -1e30
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, lk_pad: int, lk_valid: int,
                  bk: int, causal: bool, window: int | None,
                  softcap: float | None, sm_scale: float, q_start_map):
+    # NOTE: refs are indexed with slices only (never bare python ints):
+    # the pinned jax's interpret-mode discharge rule rejects scalar int
+    # indices inside pl.load/pl.store (AttributeError on `.shape`), and
+    # slice indexing lowers identically on the compiled path.
     qb = pl.program_id(2)
-    q = q_ref[0, 0].astype(jnp.float32) * sm_scale      # (BQ, D)
+    q = q_ref[...][0, 0].astype(jnp.float32) * sm_scale  # (BQ, D)
     bq, d = q.shape
     q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
 
@@ -40,10 +44,9 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, lk_pad: int, lk_valid: int,
     def body(i, carry):
         acc, m_i, l_i = carry
         start = i * bk
-        k = pl.load(k_ref, (0, 0, pl.ds(start, bk), slice(None))
-                    ).astype(jnp.float32)                # (BK, D)
-        v = pl.load(v_ref, (0, 0, pl.ds(start, bk), slice(None))
-                    ).astype(jnp.float32)
+        kv_idx = (slice(None), slice(None), pl.ds(start, bk), slice(None))
+        k = pl.load(k_ref, kv_idx)[0, 0].astype(jnp.float32)     # (BK, D)
+        v = pl.load(v_ref, kv_idx)[0, 0].astype(jnp.float32)
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)          # (BQ, BK)
@@ -69,7 +72,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, lk_pad: int, lk_valid: int,
     m0 = jnp.full((bq, 1), NEG_INF, jnp.float32)
     l0 = jnp.zeros((bq, 1), jnp.float32)
     acc, m_i, l_i = jax.lax.fori_loop(0, n_kb, body, (acc0, m0, l0))
-    o_ref[0, 0] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)).astype(
+        o_ref.dtype)[None, None]
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -30,15 +30,22 @@ DEFAULT_CHUNK = 128
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
                 *, length: int, chunk: int):
-    a_log = a_ref[0].astype(jnp.float32)                     # scalar A (<0)
+    # NOTE: refs are indexed with slices only (never bare python ints):
+    # the pinned jax's interpret-mode discharge rule rejects scalar int
+    # indices inside pl.load/pl.store (AttributeError on `.shape`), and
+    # slice indexing lowers identically on the compiled path.
+    a_log = a_ref[...][0].astype(jnp.float32)                # scalar A (<0)
     n_chunks = length // chunk
 
     def body(i, state):
-        sl = (0, pl.ds(i * chunk, chunk))
-        x = pl.load(x_ref, sl + (0, slice(None))).astype(jnp.float32)   # (Q,P)
-        dt = pl.load(dt_ref, sl + (0,)).astype(jnp.float32)             # (Q,)
-        bm = pl.load(b_ref, sl + (0, slice(None))).astype(jnp.float32)  # (Q,N)
-        cm = pl.load(c_ref, sl + (0, slice(None))).astype(jnp.float32)  # (Q,N)
+        sl = (slice(None), pl.ds(i * chunk, chunk), slice(None))
+        x = pl.load(x_ref, sl + (slice(None),))[0, :, 0]\
+            .astype(jnp.float32)                                        # (Q,P)
+        dt = pl.load(dt_ref, sl)[0, :, 0].astype(jnp.float32)           # (Q,)
+        bm = pl.load(b_ref, sl + (slice(None),))[0, :, 0]\
+            .astype(jnp.float32)                                        # (Q,N)
+        cm = pl.load(c_ref, sl + (slice(None),))[0, :, 0]\
+            .astype(jnp.float32)                                        # (Q,N)
 
         a_dt = a_log * dt                                    # (Q,)  <= 0
         s = jnp.cumsum(a_dt)                                 # (Q,)
@@ -67,12 +74,13 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
             w, bm, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)              # (P,N)
 
-        pl.store(y_ref, sl + (0, slice(None)), y.astype(y_ref.dtype))
+        pl.store(y_ref, sl + (slice(None),),
+                 y.astype(y_ref.dtype)[None, :, None, :])
         return state
 
-    state0 = h0_ref[0, 0].astype(jnp.float32)
+    state0 = h0_ref[...][0, 0].astype(jnp.float32)
     state = jax.lax.fori_loop(0, n_chunks, body, state0)
-    hout_ref[0, 0] = state.astype(hout_ref.dtype)
+    hout_ref[...] = state.astype(hout_ref.dtype)[None, None]
 
 
 def ssd_scan(x, dt, a_log, b_mat, c_mat, h0=None, *,

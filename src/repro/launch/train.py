@@ -35,6 +35,15 @@ def main(argv=None):
                     choices=["paper", "auto"],
                     help="paper: the paper's PE-count switch; auto: adds "
                          "the >=1MiB ring switch (EXPERIMENTS §Perf P2)")
+    ap.add_argument("--grad-rs", default="off",
+                    choices=["off", "on", "auto"],
+                    help="bucketed ZeRO-style reduce-scatter+allgather "
+                         "gradient sync; auto switches on above "
+                         "GRAD_RS_AUTO_BYTES of synced grads (DESIGN §10)")
+    ap.add_argument("--pipeline-chunks", default=None,
+                    help="chunked double-buffered collective execution: "
+                         "an int, or 'auto' for the cost-model pick "
+                         "(DESIGN §10)")
     ap.add_argument("--remat", default=None,
                     choices=[None, "none", "full", "selective"],
                     help="override the config remat policy (§Perf P5)")
@@ -67,9 +76,14 @@ def main(argv=None):
                          if cfg.frontend == "vision" else 0))
 
     with jax.set_mesh(mesh):
+        grad_rs = {"off": False, "on": True, "auto": "auto"}[args.grad_rs]
+        chunks = args.pipeline_chunks
+        if chunks is not None and chunks != "auto":
+            chunks = int(chunks)
         init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh)
         wrap, _, (oshapes, ospecs), ocfg = build.make_train_step(
-            cfg, mesh, args.comm, allreduce_algo=args.allreduce_algo)
+            cfg, mesh, args.comm, allreduce_algo=args.allreduce_algo,
+            grad_rs=grad_rs, pipeline_chunks=chunks)
         ocfg = dataclasses.replace(ocfg, lr=args.lr)
 
         batch0 = pipe.batch(0)

@@ -63,11 +63,16 @@ class Comm:
                        (None = abmodel.ICI_V5E)
       grad_rs        : ZeRO-1 style reduce-scatter + allgather gradient
                        sync instead of allreduce (beyond-paper, §Perf P2)
+      pipeline_chunks: chunked double-buffered schedule execution for
+                       shmem allreduces (int, "auto" = cost-model pick,
+                       None = monolithic; bit-identical either way,
+                       DESIGN.md §10)
     """
 
     def __init__(self, axes: AxisSpec, backend: str = "shmem",
                  allreduce_algo: str = "paper", grad_rs: bool = False,
-                 topo: MeshTopology | None = None, link=None):
+                 topo: MeshTopology | None = None, link=None,
+                 pipeline_chunks=None):
         assert backend in ("shmem", "xla")
         assert allreduce_algo in ("paper", "auto", "rd", "ring")
         self.axes = axes
@@ -76,6 +81,7 @@ class Comm:
         self.grad_rs = grad_rs
         self.topo = topo
         self.link = link
+        self.pipeline_chunks = pipeline_chunks
 
     # -- helpers -------------------------------------------------------------
     def _net(self, axis) -> SpmdNetOps:
@@ -107,7 +113,8 @@ class Comm:
         algo = None if self.allreduce_algo == "paper" else self.allreduce_algo
         return jax.tree.map(
             lambda v: coll.allreduce(net, v, op, algorithm=algo,
-                                     topo=self.topo, link=self.link), x)
+                                     topo=self.topo, link=self.link,
+                                     pipeline_chunks=self.pipeline_chunks), x)
 
     def allgather(self, x, axis, *, concat_axis: int = 0):
         if axis is None or axis == ():
@@ -186,4 +193,37 @@ class Comm:
                 out = self.allreduce(out, axes.pod)
         if mean:
             out = jax.tree.map(lambda g: g / scale_n, out)
+        return out
+
+    def grad_sync_bucketed(self, buckets, *, mean: bool = True):
+        """ZeRO-style bucketed gradient sync over the data(+pod) axes:
+        every flat symmetric-heap bucket is ring reduce-scattered, then
+        ring allgathered, with the two phases issued bucket-interleaved —
+        all reduce-scatters first, then the allgathers — so bucket i's
+        allgather has no dependency on bucket j>i's reduce-scatter and the
+        'DMA engine' can fly them concurrently (the paper's put-overlap
+        discipline applied at bucket granularity, DESIGN.md §10).
+
+        This replaces the single-shot allreduce for large models: per
+        bucket the wire cost drops from log2(N) full buffers (recursive
+        doubling) to ~2x the buffer, and the bucket pipeline hides each
+        allgather behind the next reduce-scatter.  Takes and returns a
+        LIST of flat buckets (train/step.fused_grad_sync packs them)."""
+        axes = self.axes
+        scale_n = 1
+        for a in axes.grad_axes():
+            scale_n *= self.axis_size(a)
+        if self.backend == "xla":
+            out = [lax.psum(b, axes.grad_axes()) for b in buckets]
+        else:
+            net = self._net(axes.data)
+            # phase 1: issue every bucket's reduce-scatter (pipeline fill)
+            owned = [coll.reduce_scatter(net, b, "sum") for b in buckets]
+            # phase 2: allgathers drain while later reduce-scatters fly
+            out = [coll.allgather_unpad(net, own, info)
+                   for own, info in owned]
+            if axes.pod is not None:
+                out = [self.allreduce(b, axes.pod) for b in out]
+        if mean:
+            out = [b / scale_n for b in out]
         return out

@@ -15,6 +15,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from ..core import heap
@@ -34,6 +35,14 @@ def _split_microbatch(batch: dict, i, mb: int):
 
 BUCKET_BYTES = 64 * 1024 * 1024   # fusion bucket size (f32 elements)
 
+# Above this much data-replicated gradient payload (f32 bytes),
+# grad_rs="auto" switches the sync from single-shot allreduce to the
+# bucketed ZeRO-style reduce-scatter + allgather (Comm.grad_sync_bucketed):
+# the ring moves ~2x the payload instead of recursive doubling's log2(N)x,
+# and bucket interleaving overlaps each allgather with the next
+# reduce-scatter.  Below it the extra per-bucket alpha is not worth it.
+GRAD_RS_AUTO_BYTES = 8 * 1024 * 1024
+
 
 def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
                     bucket_bytes: int = BUCKET_BYTES):
@@ -41,9 +50,11 @@ def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
     are data-replicated; others pass through untouched.
 
     Fusion packs leaves onto flat symmetric-heap buffers in buckets of
-    `bucket_bytes` — one allreduce per bucket instead of one per tensor
+    `bucket_bytes` — one collective per bucket instead of one per tensor
     (alpha amortization), while keeping each message small enough to
-    pipeline."""
+    pipeline.  With comm.grad_rs the buckets go through the bucketed
+    reduce-scatter + allgather path (one interleaved issue for ALL
+    buckets) instead of one allreduce each."""
     leaves, treedef = jax.tree.flatten(grads)
     mask = treedef.flatten_up_to(sync_mask)
     to_sync = [l for l, m in zip(leaves, mask) if m]
@@ -60,11 +71,15 @@ def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
             cur_n += l.size
         if cur:
             buckets.append(cur)
+        specs = [heap.plan_pack(b, dtype=jnp.float32) for b in buckets]
+        bufs = [heap.pack(b, s) for b, s in zip(buckets, specs)]
+        if comm.grad_rs and comm.backend == "shmem":
+            outs = comm.grad_sync_bucketed(bufs, mean=True)
+        else:
+            outs = [comm.grad_sync(buf, mean=True) for buf in bufs]
         synced = []
-        for b in buckets:
-            spec = heap.plan_pack(b, dtype=jnp.float32)
-            buf = comm.grad_sync(heap.pack(b, spec), mean=True)
-            synced.extend(heap.unpack(buf, spec))
+        for out, s in zip(outs, specs):
+            synced.extend(heap.unpack(out, s))
     else:
         synced = comm.grad_sync(to_sync, mean=True)
     synced = [s.astype(l.dtype) for s, l in zip(synced, to_sync)]
@@ -76,14 +91,30 @@ def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
 def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
                      adamw: opt.AdamWConfig | None = None,
                      fuse_grads: bool = True, allreduce_algo: str = "paper",
-                     grad_rs: bool = False):
+                     grad_rs: bool | str = False, pipeline_chunks=None):
     """Returns step(params, opt_state, batch) -> (loss, params, opt_state)
-    to be wrapped in shard_map by the launcher."""
+    to be wrapped in shard_map by the launcher.
+
+    grad_rs: True forces the bucketed reduce-scatter + allgather gradient
+    sync, False the single-shot allreduce, "auto" switches on it when the
+    data-replicated gradient payload exceeds GRAD_RS_AUTO_BYTES (large
+    models).  pipeline_chunks threads the chunked-schedule knob (int /
+    "auto" / None) to every shmem allreduce in the step."""
     adamw = adamw or opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
 
     def step(params, opt_state, batch):
+        rs = grad_rs
+        if grad_rs == "auto":
+            shapes_ = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+            mask_ = sharding.needs_data_sync(cfg, shapes_)
+            flat, tdef = jax.tree.flatten(shapes_)
+            mflat = tdef.flatten_up_to(mask_)
+            synced_bytes = sum(4 * int(np.prod(s.shape))
+                               for s, m in zip(flat, mflat) if m)
+            rs = synced_bytes >= GRAD_RS_AUTO_BYTES
         comm = Comm(axes, backend, allreduce_algo=allreduce_algo,
-                    grad_rs=grad_rs)
+                    grad_rs=rs, pipeline_chunks=pipeline_chunks)
         # clamp grad-accumulation to the local batch (a bigger mesh shrinks
         # B_local; slicing zero-size microbatches would silently no-op)
         b_local = jax.tree.leaves(batch)[0].shape[0]

@@ -1,0 +1,204 @@
+"""Teams & hierarchical-collective benchmark (DESIGN.md §11).
+
+Three sections, in the predicted-vs-measured discipline of
+bench_patterns/bench_overlap (every modeled column comes from the SAME
+Schedule objects that execute):
+
+  1. Team-relative schedules, predicted vs measured: fit the SIM
+     substrate's alpha-beta from bare stages, then compare measured SIM
+     wall time of row-team collectives against the lifted schedule's own
+     pricing (and the paper-NoC prediction alongside).
+  2. Flat vs hierarchical allreduce by message size and mesh shape:
+     modeled times for flat rd / flat ring / hier on each topology, the
+     modeled cross-over size where hier starts to win, and measured SIM
+     wall times at a size on each side.
+  3. Selector: `choose_algorithm` (monolithic) must pick hier above its
+     own cross-over on 2D meshes, and `choose_schedule` — which also
+     prices CHUNKED flat execution — must still pick hier for large
+     messages on a mesh with an expensive cross axis (the §8 pod story);
+     this is the acceptance configuration.
+
+  PYTHONPATH=src python -m benchmarks.bench_teams
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import abmodel, collectives as coll, sim_ctx
+from repro.core import team as team_mod
+from repro.core.netops import SimNetOps
+from repro.core.topology import MeshTopology, epiphany3
+
+from ._util import sized, time_fn as _time
+
+NOC = abmodel.EPIPHANY_NOC
+ROWS: list[tuple] = []
+
+# (name, topology) cases: the paper's chip, a non-pow2 mesh, and a
+# two-tier mesh whose cross axis costs 10x (the DESIGN §8 pod analogue).
+MESHES = [
+    ("epiphany3_4x4", epiphany3()),
+    ("mesh_2x3", MeshTopology(shape=(2, 3), torus=(False, False))),
+    ("podded_8x8", MeshTopology(shape=(8, 8), torus=(False, True),
+                                link_cost=(10.0, 1.0))),
+]
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def fit_sim_link(n: int) -> abmodel.LinkModel:
+    net = SimNetOps(n)
+    pattern = coll.fcollect_schedule(n, 0.0, "ring").stages[0].pattern
+    sizes = [64, 256, 1024, 4096, 16384]
+    times = [_time(lambda v: net.ppermute(v, pattern), sized(s, n))
+             for s in sizes]
+    fit = abmodel.fit(sizes, times)
+    link = abmodel.LinkModel(alpha_s=max(fit.alpha, 1e-9), hop_s=0.0,
+                             bw_Bps=max(fit.inv_beta, 1.0))
+    row("sim_link_alpha_us", fit.alpha * 1e6,
+        f"beta^-1={fit.inv_beta / 1e9:.2f}GB/s")
+    return link
+
+
+# -- 1. team-relative schedules: predicted vs measured ------------------------
+
+def bench_team_schedules(sim_link: abmodel.LinkModel):
+    print("\n== team-relative schedules, predicted vs measured "
+          "(row teams of epiphany3) ==")
+    topo = epiphany3()
+    n = topo.n_pes
+    ctx = sim_ctx(n, topo)
+    rows_part = team_mod.split_2d(team_mod.team_world(n), topo, -1)
+    team = rows_part.teams[1]           # PEs 4..7
+    K = team.size
+    for nbytes in (256, 4096, 65536):
+        x = sized(nbytes, n)
+        cases = [
+            (f"team_to_all_rd_{nbytes}B",
+             team.lift_schedule(coll.allreduce_schedule(K, nbytes, "rd")),
+             lambda v: ctx.to_all(v, "sum", algorithm="rd", team=team)),
+            (f"team_bcast_{nbytes}B",
+             team.lift_schedule(coll.broadcast_schedule(K, nbytes)),
+             lambda v: ctx.broadcast(v, 0, team=team)),
+            (f"part_to_all_ring_{nbytes}B",
+             rows_part.lift_schedule(
+                 coll.allreduce_schedule(K, nbytes, "ring")),
+             lambda v: ctx.to_all(v, "sum", algorithm="ring",
+                                  team=rows_part)),
+        ]
+        for name, sched, run in cases:
+            measured = _time(run, x)
+            pred_fit = sched.time(None, sim_link)
+            pred_noc = sched.time(topo, NOC)
+            ratio = measured / pred_fit if pred_fit > 0 else float("inf")
+            row(name, measured * 1e6,
+                f"fit={pred_fit * 1e6:.2f}us(x{ratio:.2f}) "
+                f"noc={pred_noc * 1e6:.3f}us stages={len(sched)}")
+
+
+# -- 2. flat vs hierarchical allreduce ----------------------------------------
+
+def bench_flat_vs_hier():
+    print("\n== flat vs hierarchical allreduce (modeled, per mesh; "
+          "measured SIM at the endpoints) ==")
+    for mname, topo in MESHES:
+        n = topo.n_pes
+        link = abmodel.ICI_V5E if "podded" in mname else NOC
+        lname = "ici" if "podded" in mname else "noc"
+        part = team_mod.split_2d(team_mod.team_world(n), topo, -1)
+        for nbytes in (4096, 1 << 16, 1 << 20):
+            t_hier = coll.allreduce_hier_schedule(
+                part, float(nbytes), topo=topo, link=link).time(topo, link)
+            flats = {a: coll.allreduce_schedule(n, float(nbytes), a)
+                     .time(topo, link)
+                     for a in (("rd", "ring") if n & (n - 1) == 0
+                               else ("ring",))}
+            best_flat = min(flats.values())
+            row(f"{mname}_{nbytes}B_hier_{lname}_model", t_hier * 1e6,
+                f"bestflat={best_flat * 1e6:.2f}us "
+                f"speedup=x{best_flat / t_hier:.2f} "
+                f"{' '.join(f'{a}={t * 1e6:.2f}us' for a, t in flats.items())}")
+
+        # modeled cross-over: smallest size where hier beats every flat
+        def hier_wins(b: float) -> bool:
+            th = coll.allreduce_hier_schedule(
+                part, b, topo=topo, link=link).time(topo, link)
+            return all(coll.allreduce_schedule(n, b, a).time(topo, link) > th
+                       for a in (("rd", "ring") if n & (n - 1) == 0
+                                 else ("ring",)))
+
+        lo, hi = 8.0, float(1 << 24)
+        if hier_wins(lo) or not hier_wins(hi):
+            always = hier_wins(lo) and hier_wins(hi)
+            row(f"{mname}_hier_crossover_B", float("nan"),
+                "hier wins everywhere (few stages at this PE count)"
+                if always else f"WARN_no_crossover_in[{lo},{hi}]B")
+        else:
+            while hi - lo > 1:
+                mid = (lo + hi) // 2
+                lo, hi = (mid, hi) if not hier_wins(mid) else (lo, mid)
+            row(f"{mname}_hier_crossover_B", hi,
+                f"hier wins >= {int(hi)}B (monolithic flat)")
+
+        # measured SIM wall time on each side of the cross-over
+        net = SimNetOps(n)
+        for nbytes in (4096, 1 << 18):
+            x = sized(nbytes, n)
+            t_flat = _time(lambda v: coll.allreduce(net, v, "sum",
+                                                    algorithm="ring"), x)
+            t_h = _time(lambda v: coll.allreduce_hier(net, v, "sum",
+                                                      partition=part), x)
+            same = np.allclose(
+                np.asarray(coll.allreduce(net, x, "sum", algorithm="ring")),
+                np.asarray(coll.allreduce_hier(net, x, "sum",
+                                               partition=part)),
+                rtol=2e-4, atol=1e-5)
+            row(f"{mname}_{nbytes}B_measured_us", t_flat * 1e6,
+                f"hier={t_h * 1e6:.2f}us allclose={same}")
+
+
+# -- 3. selector --------------------------------------------------------------
+
+def bench_selector():
+    print("\n== selector: choose_algorithm / choose_schedule with a "
+          "partition ==")
+    ok_all = True
+    for mname, topo in MESHES:
+        n = topo.n_pes
+        link = abmodel.ICI_V5E if "podded" in mname else NOC
+        part = team_mod.split_2d(team_mod.team_world(n), topo, -1)
+        for nbytes in (64, 4096, 1 << 18, 1 << 20):
+            algo = coll.choose_algorithm(n, float(nbytes), topo, link,
+                                         partition=part)
+            algo_c, chunks = coll.choose_schedule(n, float(nbytes), topo,
+                                                  link, partition=part)
+            row(f"{mname}_pick_{nbytes}B", 0.0,
+                f"choose_algorithm={algo} "
+                f"choose_schedule=({algo_c},chunks={chunks})")
+    # acceptance check: a (large message, 2D mesh) configuration where
+    # choose_schedule — chunked flat candidates included — picks hier
+    topo = dict(MESHES)["podded_8x8"]
+    part = team_mod.split_2d(team_mod.team_world(topo.n_pes), topo, -1)
+    algo, chunks = coll.choose_schedule(topo.n_pes, float(1 << 18), topo,
+                                        abmodel.ICI_V5E, partition=part)
+    ok = algo == "hier"
+    ok_all &= ok
+    row("choose_schedule_hier_acceptance", 0.0,
+        f"podded_8x8 256KiB -> ({algo},{chunks}) "
+        f"{'OK' if ok else 'WARN_expected_hier'}")
+    return ok_all
+
+
+def main():
+    print("name,us,derived")
+    link = fit_sim_link(16)
+    bench_team_schedules(link)
+    bench_flat_vs_hier()
+    bench_selector()
+
+
+if __name__ == "__main__":
+    main()

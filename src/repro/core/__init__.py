@@ -1,14 +1,18 @@
 """ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
-from . import abmodel, collectives, heap, netops, pattern, shmem, topology
+from . import (abmodel, collectives, heap, netops, pattern, shmem, team,
+               topology)
 from .netops import NetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, Schedule, Stage, as_pattern, compile_pattern
-from .shmem import ShmemContext, sim_ctx, spmd_ctx
+from .shmem import Ctx, ShmemContext, sim_ctx, spmd_ctx
+from .team import (Team, TeamPartition, from_active_set, make_team, split_2d,
+                   split_strided, team_world)
 from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
 
 __all__ = [
-    "abmodel", "collectives", "heap", "netops", "pattern", "shmem",
+    "abmodel", "collectives", "heap", "netops", "pattern", "shmem", "team",
     "topology", "NetOps", "SimNetOps", "SpmdNetOps", "CommPattern",
-    "Schedule", "Stage", "as_pattern", "compile_pattern", "ShmemContext",
-    "sim_ctx", "spmd_ctx", "MeshTopology", "epiphany3", "v5e_multipod",
-    "v5e_pod",
+    "Schedule", "Stage", "as_pattern", "compile_pattern", "Ctx",
+    "ShmemContext", "sim_ctx", "spmd_ctx", "Team", "TeamPartition",
+    "from_active_set", "make_team", "split_2d", "split_strided",
+    "team_world", "MeshTopology", "epiphany3", "v5e_multipod", "v5e_pod",
 ]

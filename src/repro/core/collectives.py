@@ -36,8 +36,8 @@ import numpy as np
 from jax import lax
 
 from .netops import NetOps, SimNetOps
-from .pattern import (CommPattern, Schedule, Stage, binomial_stage_pattern,
-                      ring_pattern, xor_pattern)
+from .pattern import (CommPattern, Schedule, Stage, as_pattern,
+                      binomial_stage_pattern, ring_pattern, xor_pattern)
 
 
 def _lmap(net: NetOps, f: Callable, *xs):
@@ -68,6 +68,45 @@ def _payload_bytes(net: NetOps, x) -> float:
     if isinstance(net, SimNetOps):
         total /= net.n_pes
     return total
+
+
+# ---------------------------------------------------------------------------
+# team-relative execution view (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# Every executor below is written against a *group view*: my rank within
+# the group, the group size, a lift of group-coordinate patterns to the
+# world patterns that execute, and (for proper-subset teams) the member
+# mask that bounds where results are defined.  team=None is the world —
+# rank is the PE id and lift is the interning pass-through, so the flat
+# paths are byte-for-byte what they were.
+
+def _team_view(net: NetOps, team):
+    """(rank, size, lift, member_mask) for `team`: a Team, a
+    TeamPartition (all member teams run concurrently — each PE uses its
+    own team's coordinates), or None for the world.
+
+    rank is the per-PE group rank (clamped to 0 off-team; off-team
+    results are masked out by the callers).  member_mask is a host bool
+    array over world PEs, or None when the group covers the world."""
+    if team is None:
+        return net.my_pe(), net.n_pes, \
+            (lambda p: as_pattern(p, net.n_pes)), None
+    if team.world_n != net.n_pes:
+        raise ValueError(f"team compiled for world_n={team.world_n} "
+                         f"used on a {net.n_pes}-PE net")
+    rank = jnp.asarray(np.maximum(team.rank_np, 0))[net.my_pe()]
+    mask = None if team.covers_world else team.member_np
+    return rank, team.size, team.lift, mask
+
+
+def _mask_out(net: NetOps, mask, out, keep=None):
+    """Restore non-members: `keep` (same shape) where given, zeros for
+    shape-changing collectives — OpenSHMEM leaves non-participants
+    undefined; we pin them for determinism and testability."""
+    if mask is None:
+        return out
+    keep = jnp.zeros_like(out) if keep is None else keep
+    return net.select(mask, out, keep)
 
 
 # ---------------------------------------------------------------------------
@@ -150,8 +189,78 @@ _SELECTABLE: dict[str, Callable[..., Schedule]] = {
 }
 
 
+def allreduce_hier_schedule(partition, nbytes: float = 0.0,
+                            cross_algorithm: str | None = None,
+                            topo=None, link=None) -> Schedule:
+    """The hierarchical two-level allreduce as ONE world Schedule
+    (DESIGN.md §11): intra-team ring reduce-scatter, cross-team allreduce
+    of the owned 1/K chunk over the peer teams (the partition's
+    complement — every team's rank-j members), intra-team ring allgather.
+    Each phase's team-coordinate stages lift to union patterns, so all
+    teams fly their stage-k exchange concurrently; stage payloads and hop
+    costs come from the lifted objects that execute.  cross_algorithm
+    None cost-model-selects the cross step (rd's log2(M) chunk sends vs
+    the ring's ~2x chunk bytes), same as the executor."""
+    K = partition.size
+    peers = partition.complement()
+    if cross_algorithm is None:
+        cross_algorithm = choose_algorithm(peers.size, nbytes / max(K, 1),
+                                           topo, link, team=peers)
+    stages = tuple(
+        partition.lift_schedule(reduce_scatter_schedule(K, nbytes)).stages
+        + peers.lift_schedule(
+            allreduce_schedule(peers.size, nbytes / max(K, 1),
+                               cross_algorithm)).stages
+        + partition.lift_schedule(allgather_schedule(K, nbytes)).stages)
+    return Schedule(
+        f"allreduce.hier[{partition.n_teams}x{K}]", stages)
+
+
+def allreduce_hier(net: NetOps, x, op: str = "sum",
+                   combine: Callable | None = None, partition=None,
+                   cross_algorithm: str | None = None, topo=None, link=None):
+    """Hierarchical two-level allreduce over a covering TeamPartition:
+
+      1. intra-team ring reduce-scatter — team rank r ends up owning the
+         team-reduced chunk (r+1) mod K;
+      2. cross-team allreduce among the chunk owners: the peer teams
+         (partition.complement(), every team's rank-j members) each hold
+         the SAME chunk index, so reducing within a peer team completes
+         that chunk globally;
+      3. intra-team ring allgather of the completed chunks.
+
+    Numerically this reorders the summation relative to the flat
+    algorithms — exact for int dtypes, allclose within float tolerance
+    (documented in DESIGN.md §11).  On a 2D mesh with row teams this
+    keeps phases 1/3 on row links and moves only 1/K of the payload
+    across rows — the fewest-largest-messages policy of §8."""
+    if partition is None:
+        raise ValueError("allreduce_hier needs a TeamPartition")
+    if not partition.covers_world:
+        raise ValueError("allreduce_hier needs a partition covering the "
+                         "world (every PE contributes)")
+    fn = combine or OPS[op]
+    peers = partition.complement()
+    if cross_algorithm is None:
+        # cost-model-select the cross step from the UNPADDED chunk bytes,
+        # exactly as allreduce_hier_schedule prices it — the executed and
+        # priced algorithms cannot diverge (even when padding rounds the
+        # actual chunk up)
+        nbytes = _payload_bytes(net, x)
+        cross_algorithm = choose_algorithm(
+            peers.size, nbytes / max(partition.size, 1), topo, link,
+            team=peers)
+    own, info = _reduce_scatter_ring(net, x, fn, team=partition)
+    if peers.size > 1:
+        own = allreduce(net, own, op, combine=combine,
+                        algorithm=cross_algorithm, team=peers,
+                        topo=topo, link=link)
+    return allgather_unpad(net, own, info, team=partition)
+
+
 def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
-                     collective: str = "allreduce") -> str:
+                     collective: str = "allreduce", team=None,
+                     partition=None) -> str:
     """Cost-model algorithm selection: price each candidate schedule with
     the alpha-beta model (eq. 1) on `topo`/`link` and take the cheapest.
 
@@ -159,13 +268,34 @@ def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
     pays log2(N) full-payload sends (alpha-optimal), the ring pays ~2x the
     payload in 2(N-1) chunk sends (bandwidth-optimal); where the cross-over
     falls depends on alpha, beta AND the mesh hop costs, which is exactly
-    what the model prices."""
+    what the model prices.
+
+    With `team`, candidates are priced in team coordinates (lifted to the
+    world patterns that execute, so team hop costs are the members' world
+    distances).  With `partition` (allreduce only), the hierarchical
+    two-level schedule joins the candidate set — "hier" wins whenever
+    keeping the bulk bytes on intra-team links beats the flat ring."""
+    if team is not None:
+        n = team.size
     if n <= 1:
         return "ring"
     build = _SELECTABLE[collective]
+
+    def _priced(a: str) -> float:
+        if a == "hier":
+            return allreduce_hier_schedule(
+                partition, nbytes, topo=topo, link=link).time(topo, link)
+        s = build(n, nbytes, algorithm=a)
+        if team is not None:
+            s = team.lift_schedule(s)
+        return s.time(topo, link)
+
     candidates = ["ring"] + (["rd"] if _is_pow2(n) else [])
-    return min(candidates,
-               key=lambda a: build(n, nbytes, algorithm=a).time(topo, link))
+    if (partition is not None and team is None and collective == "allreduce"
+            and partition.covers_world and partition.n_teams > 1
+            and partition.size > 1):
+        candidates.append("hier")
+    return min(candidates, key=_priced)
 
 
 # Upper bound on pipeline depth "auto" will consider; deeper pipelines pay
@@ -175,8 +305,8 @@ PIPELINE_MAX_CHUNKS = 16
 
 def choose_schedule(n: int, nbytes: float, topo=None, link=None,
                     collective: str = "allreduce",
-                    max_chunks: int = PIPELINE_MAX_CHUNKS
-                    ) -> tuple[str, int]:
+                    max_chunks: int = PIPELINE_MAX_CHUNKS,
+                    partition=None) -> tuple[str, int]:
     """choose_algorithm extended over the pipelining axis: price every
     candidate (algorithm, chunk-count) pair with the alpha-beta model —
     `abmodel.modeled_pipelined_time` for chunked, eq. 1 for monolithic —
@@ -184,7 +314,10 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
 
     n_chunks == 1 means monolithic execution; above the modeled pipelining
     cross-over (where the drained bandwidth saving outweighs the per-chunk
-    alpha) the chunk count grows toward `max_chunks`."""
+    alpha) the chunk count grows toward `max_chunks`.  With `partition`
+    (allreduce only) the hierarchical schedule competes too — priced
+    monolithic, since team-relative execution does not pipeline
+    (DESIGN.md §11)."""
     from . import abmodel
     if n <= 1:
         return "ring", 1
@@ -197,6 +330,13 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
         t = abmodel.modeled_pipelined_time(cost, c, link)
         if t < best_t:
             best, best_t = (algo, c), t
+    if (partition is not None and collective == "allreduce"
+            and partition.covers_world and partition.n_teams > 1
+            and partition.size > 1):
+        t = allreduce_hier_schedule(
+            partition, nbytes, topo=topo, link=link).time(topo, link)
+        if t < best_t:
+            best, best_t = ("hier", 1), t
     return best
 
 
@@ -313,17 +453,19 @@ def _interleave_blocks(outs, bounds, n: int, ax: int):
 # barrier
 # ---------------------------------------------------------------------------
 
-def barrier(net: NetOps, token=None):
-    """Dissemination barrier: round k exchanges a token with PE (i + 2^k).
+def barrier(net: NetOps, token=None, team=None):
+    """Dissemination barrier: round k exchanges a token with rank
+    (i + 2^k) of the group (`team`-relative ranks when a team is given).
 
     Returns a scalar token; thread it into downstream computation to order
     operations (the SPMD analogue of 'all cores reached this line')."""
-    n = net.n_pes
+    _, n, lift, _ = _team_view(net, team)
     tok = jnp.zeros((), jnp.int32) if token is None else token
     if isinstance(net, SimNetOps):
-        tok = jnp.broadcast_to(tok, (n,) + tok.shape[1:]) if tok.ndim == 0 else tok
+        tok = jnp.broadcast_to(tok, (net.n_pes,) + tok.shape[1:]) \
+            if tok.ndim == 0 else tok
     for st in barrier_schedule(n).stages:
-        tok = tok + net.ppermute(tok, st.pattern)
+        tok = tok + net.ppermute(tok, lift(st.pattern))
     return tok
 
 
@@ -332,12 +474,15 @@ def barrier(net: NetOps, token=None):
 # ---------------------------------------------------------------------------
 
 def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
-              topo=None, link=None):
-    n = net.n_pes
+              topo=None, link=None, team=None):
+    """Farthest-first binomial broadcast; with `team`, `root` is a TEAM
+    rank and only members take the root's value (non-members keep x)."""
+    _, n, lift, _ = _team_view(net, team)
     if n == 1:
         return x
     sched = broadcast_schedule(n, _payload_bytes(net, x), root)
-    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link)
+    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link) \
+        if team is None else 1
     if chunks > 1:
         pieces, _, restore = _flat_pieces(net, x, chunks)
 
@@ -349,8 +494,9 @@ def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
         return restore(_software_pipeline(pieces, len(sched.stages), stage))
     buf = x
     for st in sched.stages:
-        recv = net.ppermute(buf, st.pattern)
-        buf = net.select(st.pattern, recv, buf)
+        p = lift(st.pattern)
+        recv = net.ppermute(buf, p)
+        buf = net.select(p, recv, buf)
     return buf
 
 
@@ -359,35 +505,37 @@ def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
 # ---------------------------------------------------------------------------
 
 def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
-             pipeline_chunks=None, topo=None, link=None):
-    """Concatenate equal-size blocks from all PEs along `axis`.
+             pipeline_chunks=None, topo=None, link=None, team=None):
+    """Concatenate equal-size blocks from all group members along `axis`.
 
-    Recursive doubling (log2 N stages, doubling message size) when N is a
-    power of two, ring otherwise — the paper's fcollect/collect split.
-    `pipeline_chunks` > 1 executes the schedule chunked/double-buffered
-    (bit-identical; DESIGN.md §10)."""
-    n = net.n_pes
+    Recursive doubling (log2 N stages, doubling message size) when the
+    group size is a power of two, ring otherwise — the paper's
+    fcollect/collect split.  `pipeline_chunks` > 1 executes the schedule
+    chunked/double-buffered (bit-identical; DESIGN.md §10).  With `team`,
+    blocks concatenate in TEAM-rank order; non-members return zeros
+    (team collectives run monolithic, §11)."""
+    _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
     algo = algorithm or ("rd" if _is_pow2(n) else "ring")
     nbytes = _payload_bytes(net, x)
-    chunks = _resolve_chunks(pipeline_chunks,
-                             fcollect_schedule(n, nbytes, algo), topo, link)
+    chunks = 1 if team is not None else _resolve_chunks(
+        pipeline_chunks, fcollect_schedule(n, nbytes, algo), topo, link)
     if algo == "rd":
-        return _fcollect_rd(net, x, axis, n_chunks=chunks)
-    return _collect_ring(net, x, axis, n_chunks=chunks)
+        return _fcollect_rd(net, x, axis, n_chunks=chunks, team=team)
+    return _collect_ring(net, x, axis, n_chunks=chunks, team=team)
 
 
 def collect(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
-            topo=None, link=None):
+            topo=None, link=None, team=None):
     """The paper's linear-scaling ring collect."""
-    n = net.n_pes
+    _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
-    chunks = _resolve_chunks(
+    chunks = 1 if team is not None else _resolve_chunks(
         pipeline_chunks,
         fcollect_schedule(n, _payload_bytes(net, x), "ring"), topo, link)
-    return _collect_ring(net, x, axis, n_chunks=chunks)
+    return _collect_ring(net, x, axis, n_chunks=chunks, team=team)
 
 
 def _out_zeros_like(x, axis, n, pe_leading):
@@ -397,19 +545,22 @@ def _out_zeros_like(x, axis, n, pe_leading):
     return jnp.zeros(shp, x.dtype)
 
 
-def _fcollect_rd(net: NetOps, x, axis: int, n_chunks: int = 1):
-    n = net.n_pes
+def _fcollect_rd(net: NetOps, x, axis: int, n_chunks: int = 1, team=None):
+    rank, n, lift, mask = _team_view(net, team)
     blk = x.shape[axis + (1 if isinstance(net, SimNetOps) else 0)]
     buf = _out_zeros_like(x, axis, n, isinstance(net, SimNetOps))
-    pe = net.my_pe()
 
     def place(b, v, i):
         starts = [0] * b.ndim
         starts[axis] = i * blk
         return lax.dynamic_update_slice(b, v, tuple(starts))
 
-    buf = _lmap(net, place, buf, x, pe)
+    buf = _lmap(net, place, buf, x, rank)
     stages = fcollect_schedule(n, _payload_bytes(net, x), "rd").stages
+    if team is not None:
+        for st in stages:
+            buf = buf + net.ppermute(buf, lift(st.pattern))
+        return _mask_out(net, mask, buf)
     if n_chunks > 1:
         # every stage is elementwise (ppermute + add of disjoint regions),
         # so pipelining slices the filled output buffer directly
@@ -445,17 +596,24 @@ def _take_blocks(net: NetOps, x, idx, nblk: int, axis: int):
     return _lmap(net, one, x, idx)
 
 
-def _collect_ring(net: NetOps, x, axis: int, n_chunks: int = 1):
-    n = net.n_pes
-    if RING_SCHEDULE == "dus":
+def _collect_ring(net: NetOps, x, axis: int, n_chunks: int = 1, team=None):
+    rank, n, lift, mask = _team_view(net, team)
+    if RING_SCHEDULE == "dus" and team is None:
         return _collect_ring_dus(net, x, axis)
-    pe = net.my_pe()
     sim = isinstance(net, SimNetOps)
     ax = axis + (1 if sim else 0)
     stages = fcollect_schedule(n, _payload_bytes(net, x), "ring").stages
-    # out block i = stacked part (pe - i) mod n
-    idx = (pe[..., None] - jnp.arange(n)) % n if sim \
-        else (pe - jnp.arange(n)) % n
+    # out block i = stacked part (rank - i) mod n
+    idx = (rank[..., None] - jnp.arange(n)) % n if sim \
+        else (rank - jnp.arange(n)) % n
+    if team is not None:
+        parts = [x]
+        cur = x
+        for st in stages:
+            cur = net.ppermute(cur, lift(st.pattern))
+            parts.append(cur)               # part t holds block (rank - t)
+        stacked = jnp.concatenate(parts, axis=ax)
+        return _mask_out(net, mask, _take_blocks(net, stacked, idx, n, axis))
     if n_chunks > 1:
         # chunk WITHIN the per-PE block along `axis` so each piece runs the
         # identical ring; block order is restored piece-wise and the full
@@ -525,7 +683,7 @@ RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: the old hand-tuned switch point,
 
 def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
               algorithm: str | None = None, topo=None, link=None,
-              pipeline_chunks=None):
+              pipeline_chunks=None, team=None, partition=None):
     """shmem_TYPE_OP_to_all.
 
     Algorithm selection generalizes the paper's PE-count switch (§3.6:
@@ -534,29 +692,58 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
     (`choose_algorithm`): recursive doubling moves the FULL buffer log2(N)
     times (alpha-optimal), the ring moves ~2x the buffer total
     (bandwidth-optimal), so large payloads take the ring even at
-    power-of-two PE counts.  Explicit "rd"/"ring" override.
+    power-of-two PE counts.  Explicit "rd"/"ring" override; "hier" runs
+    the hierarchical two-level schedule over `partition` (DESIGN.md §11),
+    and "auto" prices it as a candidate whenever a partition is given.
+
+    `team` scopes the reduction to a Team (members reduce among
+    themselves; non-members pass x through unchanged) or runs every team
+    of a TeamPartition concurrently; team execution is monolithic.
 
     `pipeline_chunks` > 1 executes the chosen schedule chunked and
     double-buffered (bit-identical to monolithic; DESIGN.md §10);
     "auto" for BOTH knobs prices every (algorithm, chunk-count) pair
     (`choose_schedule`) and runs the cheapest."""
+    fn = combine or OPS[op]
+    nbytes = _payload_bytes(net, x)
+    if team is not None:
+        if algorithm == "hier" or partition is not None:
+            raise ValueError(
+                "team= and partition= are mutually exclusive: hier runs "
+                "over a world-covering partition=; team-scoped reductions "
+                "are flat rd/ring")
+        _, n, _, _ = _team_view(net, team)
+        if n == 1:
+            return x
+        if algorithm == "auto":
+            algo = choose_algorithm(n, nbytes, topo, link, team=team)
+        elif algorithm in (None, "paper"):
+            algo = "rd" if _is_pow2(n) else "ring"
+        else:
+            algo = algorithm
+        return _allreduce_team(net, x, fn, algo, team)
     n = net.n_pes
     if n == 1:
         return x
-    fn = combine or OPS[op]
-    nbytes = _payload_bytes(net, x)
+    if algorithm == "hier":
+        return allreduce_hier(net, x, op, combine=combine,
+                              partition=partition, topo=topo, link=link)
     if algorithm == "auto" and pipeline_chunks == "auto":
-        algo, chunks = choose_schedule(n, nbytes, topo, link)
+        algo, chunks = choose_schedule(n, nbytes, topo, link,
+                                       partition=partition)
     else:
         if algorithm == "auto":
-            algo = choose_algorithm(n, nbytes, topo, link)
+            algo = choose_algorithm(n, nbytes, topo, link,
+                                    partition=partition)
         elif algorithm is None:
             algo = "rd" if _is_pow2(n) else "ring"
         else:
             algo = algorithm
-        chunks = _resolve_chunks(pipeline_chunks,
-                                 allreduce_schedule(n, nbytes, algo),
-                                 topo, link)
+        chunks = 1 if algo == "hier" else _resolve_chunks(
+            pipeline_chunks, allreduce_schedule(n, nbytes, algo), topo, link)
+    if algo == "hier":
+        return allreduce_hier(net, x, op, combine=combine,
+                              partition=partition, topo=topo, link=link)
     if algo == "rd":
         stages = allreduce_schedule(n, nbytes, "rd").stages
         if chunks > 1:
@@ -571,6 +758,23 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
         return _allreduce_ring_pipelined(net, x, fn, chunks)
     rs, shape_info = _reduce_scatter_ring(net, x, fn)
     return allgather_unpad(net, rs, shape_info)
+
+
+def _allreduce_team(net: NetOps, x, fn, algo: str, team):
+    """Team-scoped allreduce (monolithic): rd runs lifted xor stages with
+    the combine applied everywhere (non-members receive zeros and are
+    restored by the final mask); ring runs the team-relative
+    reduce-scatter + allgather."""
+    _, n, lift, mask = _team_view(net, team)
+    if algo == "rd":
+        out = x
+        for st in allreduce_schedule(n, _payload_bytes(net, x), "rd").stages:
+            recv = net.ppermute(out, lift(st.pattern))
+            out = jax.tree.map(fn, out, recv)
+    else:
+        rs, info = _reduce_scatter_ring(net, x, fn, team=team)
+        out = allgather_unpad(net, rs, info, team=team)
+    return _mask_out(net, mask, out, keep=x)
 
 
 def _allreduce_rd_pipelined(net: NetOps, x, fn, stages, n_chunks: int):
@@ -644,50 +848,53 @@ def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int):
 
 
 def reduce_scatter(net: NetOps, x, op: str = "sum",
-                   combine: Callable | None = None):
+                   combine: Callable | None = None, team=None):
     """Ring reduce-scatter; returns this PE's owned chunk of the flattened,
-    padded array plus the info needed to allgather/unpad it."""
+    padded array plus the info needed to allgather/unpad it.  With `team`
+    the ring runs in team coordinates (a TeamPartition runs every team's
+    ring concurrently); chunk ownership is by team rank."""
     fn = combine or OPS[op]
-    return _reduce_scatter_ring(net, x, fn)
+    return _reduce_scatter_ring(net, x, fn, team=team)
 
 
-def _reduce_scatter_ring(net: NetOps, x, fn):
+def _reduce_scatter_ring(net: NetOps, x, fn, team=None):
     """Ring reduce-scatter with the static schedule (§Perf P1): one
     pre-rotation puts every stage's chunk at a STATIC offset, so the loop
-    body is free of dynamic slicing (r block t = chunk (pe + t) mod n)."""
-    n = net.n_pes
+    body is free of dynamic slicing (r block t = chunk (rank + t) mod n).
+    `rank` is the group rank of the `team` view (the PE id for the
+    world); non-members of a proper-subset team get a zero chunk."""
+    rank, n, lift, mask = _team_view(net, team)
     sim = isinstance(net, SimNetOps)
     orig_shape = x.shape[1:] if sim else x.shape
     size = int(np.prod(orig_shape))
     chunk = -(-size // n)
     padded = chunk * n
-    pe = net.my_pe()
 
     def flatpad(v):
         f = v.reshape(-1)
         return jnp.pad(f, (0, padded - size))
 
     buf = _lmap(net, flatpad, x)
-    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
-        else (pe + jnp.arange(n)) % n
+    idx = (rank[..., None] + jnp.arange(n)) % n if sim \
+        else (rank + jnp.arange(n)) % n
     r = _take_blocks(net, buf, idx, n, 0)
 
     def static_chunk(b, t):
         return b[..., t * chunk:(t + 1) * chunk] if sim \
             else b[t * chunk:(t + 1) * chunk]
 
-    cur = static_chunk(r, 0)                     # chunk[pe]
+    cur = static_chunk(r, 0)                     # chunk[rank]
     sched = reduce_scatter_schedule(n, _payload_bytes(net, x))
     for j, st in enumerate(sched.stages, start=1):
-        cur = net.ppermute(cur, st.pattern)
-        cur = fn(static_chunk(r, n - j), cur)    # chunk[(pe - j) mod n]
-    # PE p now owns the fully-reduced chunk (p + 1) % n
-    own_idx = (pe + 1) % n
+        cur = net.ppermute(cur, lift(st.pattern))
+        cur = fn(static_chunk(r, n - j), cur)    # chunk[(rank - j) mod n]
+    # rank p now owns the fully-reduced chunk (p + 1) % n
+    own_idx = (rank + 1) % n
     info = (orig_shape, size, chunk, own_idx)
-    return cur, info
+    return _mask_out(net, mask, cur), info
 
 
-def allgather_unpad(net: NetOps, chunk_val, info):
+def allgather_unpad(net: NetOps, chunk_val, info, team=None):
     """Ring allgather of a `reduce_scatter` result, undoing its flatten/pad.
 
     `info` is the handle `reduce_scatter` returned alongside the owned
@@ -697,27 +904,27 @@ def allgather_unpad(net: NetOps, chunk_val, info):
     ``allgather_unpad(net, *reduce_scatter(net, x))`` is the
     bandwidth-optimal ring allreduce (~2x payload on the wire vs log2(N)x
     for recursive doubling) — the ZeRO-style gradient-sync building block
-    (DESIGN.md §8)."""
+    (DESIGN.md §8).  Pass the same `team` the reduce-scatter ran with;
+    non-members of a proper-subset team read zeros."""
     orig_shape, size, chunk, own_idx = info
-    n = net.n_pes
+    rank, n, lift, mask = _team_view(net, team)
     sim = isinstance(net, SimNetOps)
-    pe = net.my_pe()
     nbytes = float(chunk * n * chunk_val.dtype.itemsize)
-    parts = [chunk_val]                 # part t = chunk (pe + 1 - t) mod n
+    parts = [chunk_val]                 # part t = chunk (rank + 1 - t) mod n
     cur = chunk_val
     for st in allgather_schedule(n, nbytes).stages:
-        cur = net.ppermute(cur, st.pattern)
+        cur = net.ppermute(cur, lift(st.pattern))
         parts.append(cur)
     stacked = jnp.concatenate(parts, axis=-1)
-    # out block i = part (pe + 1 - i) mod n
-    idx = (pe[..., None] + 1 - jnp.arange(n)) % n if sim \
-        else (pe + 1 - jnp.arange(n)) % n
+    # out block i = part (rank + 1 - i) mod n
+    idx = (rank[..., None] + 1 - jnp.arange(n)) % n if sim \
+        else (rank + 1 - jnp.arange(n)) % n
     out = _take_blocks(net, stacked, idx, n, 0)
 
     def unpad(b):
         return b[:size].reshape(orig_shape)
 
-    return _lmap(net, unpad, out)
+    return _mask_out(net, mask, _lmap(net, unpad, out))
 
 
 # Backwards-compatible private alias (promoted to the public API above).
@@ -729,36 +936,45 @@ _allgather_unpad = allgather_unpad
 # ---------------------------------------------------------------------------
 
 def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
-             topo=None, link=None):
-    """out[src-block] = x_src[my-block]; x's `axis` dim = n_pes * block.
+             topo=None, link=None, team=None):
+    """out[src-block] = x_src[my-block]; x's `axis` dim = group size *
+    block (group = the world, or `team`'s members in team-rank order).
 
     Static schedule (§Perf P1): one pre-rotation makes every stage's send
     block a static slice; received parts concatenate in ring order and one
     post-gather restores block order — no per-stage dynamic updates.
     `pipeline_chunks` > 1 chunks each block's payload and pipelines the
-    pairwise sends (bit-identical; DESIGN.md §10)."""
-    n = net.n_pes
+    pairwise sends (bit-identical; DESIGN.md §10; team execution is
+    monolithic, non-members return zeros)."""
+    rank, n, lift, mask = _team_view(net, team)
     if n == 1:
         return x
     sim = isinstance(net, SimNetOps)
     ax = axis + (1 if sim else 0)
     dim = x.shape[ax]
-    assert dim % n == 0, f"alltoall axis dim {dim} not divisible by n_pes {n}"
-    pe = net.my_pe()
+    assert dim % n == 0, f"alltoall axis dim {dim} not divisible by n={n}"
 
-    # pre-rotate: r block t = x block (pe + t) mod n
-    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
-        else (pe + jnp.arange(n)) % n
+    # pre-rotate: r block t = x block (rank + t) mod n
+    idx = (rank[..., None] + jnp.arange(n)) % n if sim \
+        else (rank + jnp.arange(n)) % n
     r = _take_blocks(net, x, idx, n, axis)
     blk = dim // n
     sched = alltoall_schedule(n, _payload_bytes(net, x))
-    out_idx = (pe[..., None] - jnp.arange(n)) % n if sim \
-        else (pe - jnp.arange(n)) % n
+    out_idx = (rank[..., None] - jnp.arange(n)) % n if sim \
+        else (rank - jnp.arange(n)) % n
 
     def static_blk(v, t, lo=0, hi=blk):
         sl = [slice(None)] * v.ndim
         sl[ax] = slice(t * blk + lo, t * blk + hi)
         return v[tuple(sl)]
+
+    if team is not None:
+        parts = [static_blk(r, 0)]
+        for j, st in enumerate(sched.stages, start=1):
+            parts.append(net.ppermute(static_blk(r, j), lift(st.pattern)))
+        stacked = jnp.concatenate(parts, axis=ax)
+        return _mask_out(net, mask,
+                         _take_blocks(net, stacked, out_idx, n, axis))
 
     chunks = _resolve_chunks(pipeline_chunks, sched, topo, link)
     if chunks > 1:

@@ -149,6 +149,14 @@ class CommPattern:
             self._rounds_cache = tuple(tuple(r) for r in rounds)
         return self._rounds_cache
 
+    def relabel(self, ranks: Sequence[int], n_pes: int) -> "CommPattern":
+        """Map this pattern's PE ids through `ranks` (index -> new PE id)
+        and compile for `n_pes` — the team-coordinate -> world-coordinate
+        lift (DESIGN.md §11).  Interned like every compiled pattern, so a
+        team-relative schedule lifts to the same world objects every call."""
+        return compile_pattern(
+            [(ranks[s], ranks[d]) for s, d in self.pairs], n_pes)
+
     # -- topology-derived cost metadata --------------------------------------
     def pair_hops(self, topo: MeshTopology | None) -> np.ndarray:
         """Weighted hop distance of every (src, dst) edge under `topo`
@@ -188,6 +196,22 @@ def _normalize(pattern: Pairs, n_pes: int) -> tuple[tuple[int, int], ...]:
     return pairs
 
 
+def intern_get(table: dict, lock: threading.Lock, cap: int, key, build):
+    """Shared intern-with-cap: double-checked lookup, FIFO eviction past
+    `cap`.  One copy of the concurrency-sensitive machinery for every
+    interned family (patterns here, teams in core/team.py)."""
+    got = table.get(key)
+    if got is None:
+        with lock:
+            got = table.get(key)
+            if got is None:
+                got = build()
+                while len(table) >= cap:
+                    table.pop(next(iter(table)))
+                table[key] = got
+    return got
+
+
 def compile_pattern(pattern: Pairs, n_pes: int) -> CommPattern:
     """Compile (and intern) a static (src, dst) pattern for `n_pes` PEs.
 
@@ -200,16 +224,9 @@ def compile_pattern(pattern: Pairs, n_pes: int) -> CommPattern:
                 f"pattern compiled for {pattern.n_pes} PEs used with {n_pes}")
         return pattern
     key = (_normalize(pattern, n_pes), n_pes)
-    got = _INTERN.get(key)
-    if got is None:
-        with _INTERN_LOCK:
-            got = _INTERN.get(key)
-            if got is None:
-                got = CommPattern(key[0], n_pes, _token=_COMPILE_TOKEN)
-                while len(_INTERN) >= _INTERN_MAX:
-                    _INTERN.pop(next(iter(_INTERN)))
-                _INTERN[key] = got
-    return got
+    return intern_get(
+        _INTERN, _INTERN_LOCK, _INTERN_MAX, key,
+        lambda: CommPattern(key[0], n_pes, _token=_COMPILE_TOKEN))
 
 
 def as_pattern(pattern: PatternLike, n_pes: int) -> CommPattern:

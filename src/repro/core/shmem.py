@@ -9,6 +9,8 @@ The OpenSHMEM 1.3 routine families the paper implements, in JAX:
                   collect / fcollect / reduce(to_all) /
                   alltoall                                §3.6
   locks           set_lock / test_lock / clear_lock       §3.7
+  teams/contexts  team_world / team_split_strided /
+                  team_split_2d / ctx_create              1.4+ (DESIGN §11)
 
 Semantics notes (DESIGN.md §6, §10): gets are owner-pushed (the paper's
 IPI-get is the *only* get on this substrate); atomics are deterministic
@@ -30,12 +32,13 @@ import numpy as np
 from jax import lax
 
 from . import collectives as coll
+from . import team as team_mod
 from .netops import NetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, PatternLike, as_pattern
 from .topology import MeshTopology
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)    # a handle: identity, not value, equality
 class Future:
     """Pending-op record of a non-blocking RMA (put_nbi/get_nbi) — one
     entry of the context's DMA descriptor queue (DESIGN.md §10).
@@ -71,6 +74,134 @@ class Future:
         return tuple(int(i) for i in np.nonzero(self.pattern.dst_mask)[0])
 
 
+class Ctx:
+    """An OpenSHMEM 1.4 communication context (``shmem_ctx_create``): a
+    PRIVATE pending-op queue over the owning :class:`ShmemContext`'s
+    substrate (DESIGN.md §11).
+
+    Non-blocking RMA issued on one context is invisible to every other:
+    ``quiet()``/``fence()`` here drain/order ONLY this context's queue, so
+    independent streams (say, gradient sync on one context while
+    activation collectives fly on another) no longer serialize behind a
+    global drain — the OpenSHMEM 1.4 rationale, and the analogue of
+    giving each stream its own e-DMA descriptor chain.
+
+    An optional `team` makes the context team-scoped: RMA patterns are
+    given in TEAM coordinates and lifted to the world pattern that
+    executes (``Team.lift``), like ``shmem_team_create_ctx``."""
+
+    def __init__(self, shmem: "ShmemContext", team=None):
+        self.shmem = shmem
+        self.team = team
+        self._pending: list[Future] = []
+        self._op_seq = 0
+
+    @property
+    def n_pes(self) -> int:
+        return self.shmem.n_pes
+
+    def compile(self, pattern: PatternLike) -> CommPattern:
+        """Compile a pattern for this context — TEAM coordinates when the
+        context is team-scoped (lifted to world), world otherwise."""
+        if self.team is not None:
+            return self.team.lift(pattern)
+        return self.shmem.compile(pattern)
+
+    def _owner_push(self, pattern: PatternLike) -> CommPattern:
+        if self.team is None:
+            return self.shmem._owner_push(pattern)
+        if isinstance(pattern, CommPattern):
+            return self.team.lift(pattern.inverse)
+        return self.compile([(o, r) for r, o in pattern])
+
+    # -- the pending-op engine (the e-DMA descriptor queue; DESIGN.md §10) ---
+    def _enqueue(self, value, pattern: CommPattern, op: str, payload
+                 ) -> Future:
+        nbytes = float(sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(payload)))
+        if isinstance(self.shmem.net, SimNetOps):
+            nbytes /= self.n_pes            # leading PE axis is not payload
+        f = Future(value, pattern=pattern, op=op, nbytes=nbytes,
+                   seq=self._op_seq)
+        self._op_seq += 1
+        self._pending.append(f)
+        return f
+
+    @property
+    def pending_count(self) -> int:
+        """Outstanding non-blocking ops not yet completed by quiet()."""
+        return len(self._pending)
+
+    def pending_ops(self) -> tuple[Future, ...]:
+        return tuple(self._pending)
+
+    def put_nbi(self, x, pattern, local=None) -> Future:
+        p = self.compile(pattern)
+        return self._enqueue(self.shmem.put(x, p, local=local), p, "put", x)
+
+    def get_nbi(self, x, pattern, local=None) -> Future:
+        p = self._owner_push(pattern)
+        return self._enqueue(self.shmem.put(x, p, local=local), p, "get", x)
+
+    def quiet(self, *futures: Future):
+        """shmem_ctx_quiet: drain THIS context's pending queue — pin
+        COMPLETION of its outstanding non-blocking ops, in issue order,
+        before anything that consumes the returned values.  Other
+        contexts' queues are untouched (per-context isolation).
+
+        Completion here is `lax.optimization_barrier` over the pending
+        values: XLA may not sink the transfers past any consumer of the
+        fenced results.  With explicit `futures`, only those ops are
+        completed (per-handle quiet); otherwise the whole queue drains and
+        empties.  Drained futures are marked done and their .value is
+        replaced by the fenced value."""
+        fs = list(futures) or self._pending
+        if not fs:
+            return ()
+        alien = [f for f in fs if not f._done and f not in self._pending]
+        if alien:
+            raise ValueError(
+                "quiet() got futures issued on a different context — "
+                "per-context isolation means each context drains its own "
+                "queue; call that context's quiet()")
+        fs = sorted(fs, key=lambda f: f.seq)     # completion in issue order
+        vals = [f.value for f in fs]
+        fenced = lax.optimization_barrier(tuple(vals))
+        for f, v in zip(fs, fenced):
+            f.value, f._done = v, True
+        self._pending = [f for f in self._pending if not f._done]
+        return fenced
+
+    def fence(self):
+        """shmem_ctx_fence: per-destination ordering WITHOUT completion
+        (OpenSHMEM §9.10), scoped to THIS context's queue.
+
+        Each pending op's value is data-chained after every earlier
+        pending op that writes an overlapping destination PE, so XLA
+        cannot deliver two same-target puts out of issue order — but the
+        ops stay pending (only quiet() completes them and empties the
+        queue).  Ops to disjoint PE sets remain unordered, exactly the
+        freedom OpenSHMEM grants.  Returns the (order-chained) pending
+        values; () when the queue is empty."""
+        if not self._pending:
+            return ()
+        last_for_pe: dict[int, Future] = {}
+        for f in sorted(self._pending, key=lambda x: x.seq):
+            targets = f.target_pes() or tuple(range(self.n_pes))
+            deps: list[Future] = []
+            for pe in targets:
+                d = last_for_pe.get(pe)
+                if d is not None and d is not f and d not in deps:
+                    deps.append(d)
+            if deps:
+                chained = lax.optimization_barrier(
+                    tuple([f.value] + [d.value for d in deps]))
+                f.value = chained[0]
+            for pe in targets:
+                last_for_pe[pe] = f
+        return tuple(f.value for f in self._pending)
+
+
 class ShmemContext:
     """One PE's view of the library (SPMD) or the whole chip's (SIM)."""
 
@@ -83,8 +214,10 @@ class ShmemContext:
         # (None = abmodel.ICI_V5E); pair with topo so selection and the
         # benchmarks' derived column agree on constants.
         self.link = link
-        self._pending: list[Future] = []
-        self._op_seq = 0
+        # The default communication context: ShmemContext-level nbi RMA,
+        # quiet and fence run on it, so shmem_quiet stays oblivious to
+        # traffic issued on explicitly-created contexts (DESIGN.md §11).
+        self.ctx_default = Ctx(self)
 
     # -- setup / query ------------------------------------------------------
     @property
@@ -147,84 +280,84 @@ class ShmemContext:
     def iget(self, x, pattern, **kw):
         return self.iput(x, self._owner_push(pattern), **kw)
 
-    # -- pending-op engine (the e-DMA descriptor queue; DESIGN.md §10) -------
-    def _enqueue(self, value, pattern: CommPattern, op: str, payload) -> Future:
-        nbytes = float(sum(l.size * l.dtype.itemsize
-                           for l in jax.tree.leaves(payload)))
-        if isinstance(self.net, SimNetOps):
-            nbytes /= self.n_pes            # leading PE axis is not payload
-        f = Future(value, pattern=pattern, op=op, nbytes=nbytes,
-                   seq=self._op_seq)
-        self._op_seq += 1
-        self._pending.append(f)
-        return f
+    # -- communication contexts (DESIGN.md §11) ------------------------------
+    # ShmemContext-level nbi RMA + quiet/fence delegate to the DEFAULT
+    # context; shmem_ctx_create gives a stream its own pending queue so
+    # its quiet/fence cannot drain (or be drained by) unrelated traffic.
+
+    def ctx_create(self, team=None) -> Ctx:
+        """shmem_ctx_create / shmem_team_create_ctx: a new communication
+        context with a private pending-op queue (team-scoped when `team`
+        is given — RMA patterns then use team coordinates)."""
+        return Ctx(self, team=team)
+
+    @property
+    def _pending(self) -> list[Future]:
+        return self.ctx_default._pending
 
     @property
     def pending_count(self) -> int:
-        """Outstanding non-blocking ops not yet completed by quiet()."""
-        return len(self._pending)
+        """Outstanding nbi ops on the DEFAULT context (quiet() completes
+        these; explicitly-created contexts track their own)."""
+        return self.ctx_default.pending_count
 
     def pending_ops(self) -> tuple[Future, ...]:
-        return tuple(self._pending)
+        return self.ctx_default.pending_ops()
 
     def put_nbi(self, x, pattern, local=None) -> Future:
-        p = self.compile(pattern)
-        return self._enqueue(self.put(x, p, local=local), p, "put", x)
+        return self.ctx_default.put_nbi(x, pattern, local=local)
 
     def get_nbi(self, x, pattern, local=None) -> Future:
-        p = self._owner_push(pattern)
-        return self._enqueue(self.put(x, p, local=local), p, "get", x)
+        return self.ctx_default.get_nbi(x, pattern, local=local)
 
     def quiet(self, *futures: Future):
-        """shmem_quiet: drain the pending queue — pin COMPLETION of all
-        outstanding non-blocking ops, in issue order, before anything that
-        consumes the returned values (the DMA-idle spin-wait analogue).
-
-        Completion here is `lax.optimization_barrier` over the pending
-        values: XLA may not sink the transfers past any consumer of the
-        fenced results.  With explicit `futures`, only those ops are
-        completed (per-handle quiet); otherwise the whole queue drains and
-        empties.  Drained futures are marked done and their .value is
-        replaced by the fenced value."""
-        fs = list(futures) or self._pending
-        if not fs:
-            return ()
-        fs = sorted(fs, key=lambda f: f.seq)     # completion in issue order
-        vals = [f.value for f in fs]
-        fenced = lax.optimization_barrier(tuple(vals))
-        for f, v in zip(fs, fenced):
-            f.value, f._done = v, True
-        self._pending = [f for f in self._pending if not f._done]
-        return fenced
+        """shmem_quiet: drain the DEFAULT context's pending queue (see
+        Ctx.quiet; ops issued on created contexts need their own
+        ctx.quiet — per-context isolation, DESIGN.md §11)."""
+        return self.ctx_default.quiet(*futures)
 
     def fence(self):
-        """shmem_fence: per-destination ordering WITHOUT completion
-        (OpenSHMEM 1.3 §9.10; the paper's dma-ordering wait).
+        """shmem_fence: per-destination ordering of the DEFAULT context's
+        queue without completing it (see Ctx.fence)."""
+        return self.ctx_default.fence()
 
-        Each pending op's value is data-chained after every earlier
-        pending op that writes an overlapping destination PE, so XLA
-        cannot deliver two same-target puts out of issue order — but the
-        ops stay pending (only quiet() completes them and empties the
-        queue).  Ops to disjoint PE sets remain unordered, exactly the
-        freedom OpenSHMEM grants.  Returns the (order-chained) pending
-        values; () when the queue is empty."""
-        if not self._pending:
-            return ()
-        last_for_pe: dict[int, Future] = {}
-        for f in sorted(self._pending, key=lambda x: x.seq):
-            targets = f.target_pes() or tuple(range(self.n_pes))
-            deps: list[Future] = []
-            for pe in targets:
-                d = last_for_pe.get(pe)
-                if d is not None and d is not f and d not in deps:
-                    deps.append(d)
-            if deps:
-                chained = lax.optimization_barrier(
-                    tuple([f.value] + [d.value for d in deps]))
-                f.value = chained[0]
-            for pe in targets:
-                last_for_pe[pe] = f
-        return tuple(f.value for f in self._pending)
+    # -- teams (OpenSHMEM 1.4+; DESIGN.md §11) -------------------------------
+    def team_world(self) -> team_mod.Team:
+        return team_mod.team_world(self.n_pes)
+
+    def team_split_strided(self, parent: team_mod.Team | None, start: int,
+                           stride: int, size: int) -> team_mod.Team:
+        """shmem_team_split_strided over `parent` (None = world)."""
+        parent = parent if parent is not None else self.team_world()
+        return team_mod.split_strided(parent, start, stride, size)
+
+    def team_split_2d(self, topo: MeshTopology | None = None,
+                      axis: int = -1) -> team_mod.TeamPartition:
+        """Row (axis=-1) / column (axis=0) teams of this context's
+        topology — the partition the hierarchical collectives run over."""
+        topo = topo if topo is not None else self.topo
+        if topo is None:
+            raise ValueError("team_split_2d needs a topology (pass topo= "
+                             "or build the context with one)")
+        return team_mod.split_2d(self.team_world(), topo, axis)
+
+    def _resolve_team(self, team, pe_start, log_pe_stride, pe_size):
+        """The 1.3 active-set shim: ``(PE_start, logPE_stride, PE_size)``
+        resolves to the interned Team the explicit API names — same team
+        object, same lifted patterns, same compiled schedules.  A world
+        team short-circuits to the flat path (identical schedules, and it
+        keeps pipelined execution available)."""
+        if pe_size is not None or pe_start is not None or log_pe_stride:
+            if team is not None:
+                raise ValueError("pass team= OR an active set, not both")
+            if pe_size is None:
+                raise ValueError("an active set needs PE_size")
+            team = team_mod.from_active_set(pe_start or 0, log_pe_stride,
+                                            pe_size, self.n_pes)
+        if (isinstance(team, team_mod.Team)
+                and team.members == tuple(range(self.n_pes))):
+            return None     # identity ranks: the flat path IS the world team
+        return team
 
     # -- collectives ----------------------------------------------------------
     def barrier_all(self, token=None):
@@ -235,43 +368,55 @@ class ShmemContext:
             return self.net.axis_psum(tok)
         return coll.barrier(self.net, token)
 
-    def barrier(self, token=None):
-        return coll.barrier(self.net, token)
+    def barrier(self, token=None, team=None):
+        return coll.barrier(self.net, token, team=team)
 
-    def broadcast(self, x, root: int = 0, pipeline_chunks=None):
+    def broadcast(self, x, root: int = 0, pipeline_chunks=None, team=None):
+        """With `team`, `root` is a TEAM rank; non-members keep x."""
         return coll.broadcast(self.net, x, root,
                               pipeline_chunks=pipeline_chunks,
-                              topo=self.topo, link=self.link)
+                              topo=self.topo, link=self.link, team=team)
 
-    def collect(self, x, axis: int = 0, pipeline_chunks=None):
+    def collect(self, x, axis: int = 0, pipeline_chunks=None, team=None):
         return coll.collect(self.net, x, axis,
                             pipeline_chunks=pipeline_chunks,
-                            topo=self.topo, link=self.link)
+                            topo=self.topo, link=self.link, team=team)
 
     def fcollect(self, x, axis: int = 0, algorithm=None,
-                 pipeline_chunks=None):
+                 pipeline_chunks=None, team=None):
         return coll.fcollect(self.net, x, axis, algorithm,
                              pipeline_chunks=pipeline_chunks,
-                             topo=self.topo, link=self.link)
+                             topo=self.topo, link=self.link, team=team)
 
     def to_all(self, x, op: str = "sum", algorithm=None,
-               pipeline_chunks=None):
+               pipeline_chunks=None, team=None, partition=None,
+               PE_start=None, logPE_stride: int = 0, PE_size=None):
         """shmem_TYPE_OP_to_all.  algorithm="auto" prices the candidate
         schedules against this context's topology and link model
         (DESIGN.md §9); pipeline_chunks="auto" additionally prices chunked
         double-buffered execution and picks the chunk count (§10) —
-        bit-identical to monolithic, whatever is selected."""
+        bit-identical to monolithic, whatever is selected.
+
+        Grouping (DESIGN.md §11): `team` scopes the reduction to a Team's
+        members (non-members pass through); the OpenSHMEM 1.3 active-set
+        triple ``(PE_start, logPE_stride, PE_size)`` resolves to the same
+        interned Team — and therefore the same compiled schedules — as
+        the explicit team API.  `partition` adds the hierarchical
+        two-level schedule to the "auto" candidates (algorithm="hier"
+        forces it)."""
+        team = self._resolve_team(team, PE_start, logPE_stride, PE_size)
         return coll.allreduce(self.net, x, op, algorithm=algorithm,
                               topo=self.topo, link=self.link,
-                              pipeline_chunks=pipeline_chunks)
+                              pipeline_chunks=pipeline_chunks,
+                              team=team, partition=partition)
 
-    def reduce_scatter(self, x, op: str = "sum"):
-        return coll.reduce_scatter(self.net, x, op)
+    def reduce_scatter(self, x, op: str = "sum", team=None):
+        return coll.reduce_scatter(self.net, x, op, team=team)
 
-    def alltoall(self, x, axis: int = 0, pipeline_chunks=None):
+    def alltoall(self, x, axis: int = 0, pipeline_chunks=None, team=None):
         return coll.alltoall(self.net, x, axis,
                              pipeline_chunks=pipeline_chunks,
-                             topo=self.topo, link=self.link)
+                             topo=self.topo, link=self.link, team=team)
 
     # -- atomics (§3.5) ---------------------------------------------------------
     def testset(self, var, value):

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import collectives as coll
+from ..core import team as team_mod
 from ..core.netops import SpmdNetOps
 from ..core.topology import MeshTopology
 
@@ -48,6 +49,9 @@ class AxisSpec:
         return ((self.pod,) if self.pod else ()) + self.data_axes()
 
 
+_UNSET = object()
+
+
 class Comm:
     """Substrate-neutral collective surface used by models and training.
 
@@ -56,7 +60,10 @@ class Comm:
                        §3.6 verbatim) or "auto" (cost-model selection:
                        candidate Schedules priced with the alpha-beta
                        model on `topo` via `coll.choose_algorithm`;
-                       beyond-paper, DESIGN.md §9)
+                       beyond-paper, DESIGN.md §9).  When `topo` is a 2D+
+                       mesh, "auto" also prices the hierarchical
+                       two-level allreduce over the mesh's row teams
+                       (DESIGN.md §11) and "hier" forces it
       topo           : MeshTopology the cost model prices hops against
                        (None = flat unit-hop network)
       link           : alpha-beta LinkModel "auto" prices with
@@ -74,7 +81,7 @@ class Comm:
                  topo: MeshTopology | None = None, link=None,
                  pipeline_chunks=None):
         assert backend in ("shmem", "xla")
-        assert allreduce_algo in ("paper", "auto", "rd", "ring")
+        assert allreduce_algo in ("paper", "auto", "rd", "ring", "hier")
         self.axes = axes
         self.backend = backend
         self.allreduce_algo = allreduce_algo
@@ -82,10 +89,31 @@ class Comm:
         self.topo = topo
         self.link = link
         self.pipeline_chunks = pipeline_chunks
+        self._partitions: dict[int, team_mod.TeamPartition | None] = {}
 
     # -- helpers -------------------------------------------------------------
     def _net(self, axis) -> SpmdNetOps:
         return SpmdNetOps(axis)
+
+    def _partition_for(self, net) -> team_mod.TeamPartition | None:
+        """The row-team partition of `topo` the hierarchical allreduce
+        runs over (DESIGN.md §11) — only when the axis PE space IS the
+        topology's PE space and the mesh has a second dimension to split;
+        None otherwise (flat candidates only).  Cached per PE count so
+        the partition's lift/complement caches survive across calls
+        (teams/patterns are interned; partitions live here)."""
+        got = self._partitions.get(net.n_pes, _UNSET)
+        if got is not _UNSET:
+            return got
+        part = None
+        if (self.topo is not None and len(self.topo.shape) >= 2
+                and self.topo.n_pes == net.n_pes):
+            part = team_mod.split_2d(team_mod.team_world(net.n_pes),
+                                     self.topo, axis=-1)
+            if part.n_teams <= 1 or part.size <= 1:
+                part = None
+        self._partitions[net.n_pes] = part
+        return part
 
     def axis_size(self, axis) -> int:
         if axis is None or axis == ():
@@ -111,10 +139,14 @@ class Comm:
             raise NotImplementedError(op)
         net = self._net(axis)
         algo = None if self.allreduce_algo == "paper" else self.allreduce_algo
+        part = self._partition_for(net) if algo in ("auto", "hier") else None
+        if algo == "hier" and part is None:
+            algo = "auto"       # no usable partition: flat candidates only
         return jax.tree.map(
             lambda v: coll.allreduce(net, v, op, algorithm=algo,
                                      topo=self.topo, link=self.link,
-                                     pipeline_chunks=self.pipeline_chunks), x)
+                                     pipeline_chunks=self.pipeline_chunks,
+                                     partition=part), x)
 
     def allgather(self, x, axis, *, concat_axis: int = 0):
         if axis is None or axis == ():
@@ -208,7 +240,13 @@ class Comm:
         bucket the wire cost drops from log2(N) full buffers (recursive
         doubling) to ~2x the buffer, and the bucket pipeline hides each
         allgather behind the next reduce-scatter.  Takes and returns a
-        LIST of flat buckets (train/step.fused_grad_sync packs them)."""
+        LIST of flat buckets (train/step.fused_grad_sync packs them).
+
+        On a 2D+ `topo` with allreduce_algo "auto"/"hier", each bucket is
+        priced against the hierarchical two-level schedule (DESIGN.md
+        §11): buckets where keeping the bulk bytes on intra-row links
+        beats the flat ring take `coll.allreduce_hier` instead of the
+        flat reduce-scatter + allgather pair."""
         axes = self.axes
         scale_n = 1
         for a in axes.grad_axes():
@@ -217,11 +255,34 @@ class Comm:
             out = [lax.psum(b, axes.grad_axes()) for b in buckets]
         else:
             net = self._net(axes.data)
-            # phase 1: issue every bucket's reduce-scatter (pipeline fill)
-            owned = [coll.reduce_scatter(net, b, "sum") for b in buckets]
+            part = self._partition_for(net) \
+                if self.allreduce_algo in ("auto", "hier") else None
+
+            def _hier_wins(b) -> bool:
+                if part is None:
+                    return False
+                if self.allreduce_algo == "hier":
+                    return True
+                # price hier against the RING schedule only — that is the
+                # path flat buckets actually execute below (not rd)
+                nbytes = float(b.size * b.dtype.itemsize)
+                t_hier = coll.allreduce_hier_schedule(
+                    part, nbytes, topo=self.topo,
+                    link=self.link).time(self.topo, self.link)
+                t_ring = coll.allreduce_schedule(
+                    net.n_pes, nbytes, "ring").time(self.topo, self.link)
+                return t_hier < t_ring
+
+            hier = [_hier_wins(b) for b in buckets]
+            # phase 1: issue every flat bucket's reduce-scatter (pipeline
+            # fill); hierarchical buckets run their own RS->cross->AG
+            owned = [None if h else coll.reduce_scatter(net, b, "sum")
+                     for b, h in zip(buckets, hier)]
             # phase 2: allgathers drain while later reduce-scatters fly
-            out = [coll.allgather_unpad(net, own, info)
-                   for own, info in owned]
+            out = [coll.allreduce_hier(net, b, "sum", partition=part,
+                                       topo=self.topo, link=self.link)
+                   if h else coll.allgather_unpad(net, *own)
+                   for b, h, own in zip(buckets, hier, owned)]
             if axes.pod is not None:
                 out = [self.allreduce(b, axes.pod) for b in out]
         if mean:

@@ -91,7 +91,8 @@ def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
 def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
                      adamw: opt.AdamWConfig | None = None,
                      fuse_grads: bool = True, allreduce_algo: str = "paper",
-                     grad_rs: bool | str = False, pipeline_chunks=None):
+                     grad_rs: bool | str = False, pipeline_chunks=None,
+                     topo=None, link=None):
     """Returns step(params, opt_state, batch) -> (loss, params, opt_state)
     to be wrapped in shard_map by the launcher.
 
@@ -99,7 +100,10 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
     sync, False the single-shot allreduce, "auto" switches on it when the
     data-replicated gradient payload exceeds GRAD_RS_AUTO_BYTES (large
     models).  pipeline_chunks threads the chunked-schedule knob (int /
-    "auto" / None) to every shmem allreduce in the step."""
+    "auto" / None) to every shmem allreduce in the step.  topo/link give
+    the cost model the mesh to price against; with a 2D+ topo and
+    allreduce_algo="auto", bucket syncs may take the hierarchical
+    two-level allreduce over the mesh's row teams (DESIGN.md §11)."""
     adamw = adamw or opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
 
     def step(params, opt_state, batch):
@@ -114,7 +118,8 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
                                for s, m in zip(flat, mflat) if m)
             rs = synced_bytes >= GRAD_RS_AUTO_BYTES
         comm = Comm(axes, backend, allreduce_algo=allreduce_algo,
-                    grad_rs=rs, pipeline_chunks=pipeline_chunks)
+                    grad_rs=rs, pipeline_chunks=pipeline_chunks,
+                    topo=topo, link=link)
         # clamp grad-accumulation to the local batch (a bigger mesh shrinks
         # B_local; slicing zero-size microbatches would silently no-op)
         b_local = jax.tree.leaves(batch)[0].shape[0]

@@ -1,0 +1,548 @@
+"""Teams & contexts subsystem tests (DESIGN.md §11): team interning and
+translation round-trips, team-scoped collectives (including singleton and
+non-contiguous strided teams), the 1.3 active-set shim, the hierarchical
+two-level allreduce's equivalence to flat (allclose for floats, exact for
+ints), the hier selector, and per-context pending-queue isolation — on
+the SIM backend here and on SPMD via a subprocess (like test_overlap)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import abmodel, sim_ctx
+from repro.core import collectives as coll
+from repro.core import team as team_mod
+from repro.core.netops import SimNetOps
+from repro.core.topology import MeshTopology, epiphany3
+
+N = 8
+
+
+@pytest.fixture
+def ctx():
+    return sim_ctx(N, epiphany3())
+
+
+def _x(n=N, w=6, seed=0, dtype=np.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(n, w).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# team structure: interning, translation, splits
+# ---------------------------------------------------------------------------
+
+def test_team_interning_and_world():
+    w = team_mod.team_world(N)
+    assert w is team_mod.team_world(N)
+    assert w.size == N and w.covers_world
+    t1 = team_mod.make_team([1, 4, 7], N)
+    t2 = team_mod.make_team([4, 1, 7], N)     # order matters: distinct teams
+    assert t1 is team_mod.make_team([1, 4, 7], N)
+    assert t1 is not t2
+    assert t1.translate(4) == 1 and t2.translate(4) == 0
+
+
+def test_translate_world_pe_round_trip():
+    t = team_mod.split_strided(team_mod.team_world(N), 1, 3, 3)  # 1, 4, 7
+    assert t.members == (1, 4, 7)
+    for r in range(t.size):
+        assert t.translate(t.world_pe(r)) == r
+    for pe in range(N):
+        r = t.translate(pe)
+        if r >= 0:
+            assert t.world_pe(r) == pe
+        else:
+            assert pe not in t.members
+
+
+def test_singleton_team_collectives(ctx):
+    t = team_mod.split_strided(team_mod.team_world(N), 3, 1, 1)
+    assert t.size == 1 and t.members == (3,)
+    x = _x()
+    # every team collective over a singleton is the identity
+    np.testing.assert_array_equal(np.asarray(ctx.to_all(x, "sum", team=t)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(ctx.broadcast(x, 0, team=t)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(ctx.fcollect(x, team=t)),
+                                  np.asarray(x))
+
+
+def test_invalid_teams_rejected():
+    w = team_mod.team_world(N)
+    with pytest.raises(ValueError):
+        team_mod.make_team([0, 0, 1], N)                   # duplicate
+    with pytest.raises(ValueError):
+        team_mod.make_team([0, N], N)                      # out of range
+    with pytest.raises(ValueError):
+        team_mod.split_strided(w, 4, 2, 4)                 # leaves parent
+    with pytest.raises(ValueError):
+        team_mod.TeamPartition([team_mod.make_team([0, 1], N),
+                                team_mod.make_team([1, 2], N)])  # overlap
+
+
+def test_split_composes_through_parent_ranks():
+    w = team_mod.team_world(16)
+    evens = team_mod.split_strided(w, 0, 2, 8)             # 0,2,...,14
+    sub = team_mod.split_strided(evens, 1, 2, 4)           # parent ranks 1,3,5,7
+    assert sub.members == (2, 6, 10, 14)
+
+
+def test_split_2d_rows_cols_and_complement():
+    topo = epiphany3()
+    w = team_mod.team_world(16)
+    rows = team_mod.split_2d(w, topo, -1)
+    cols = team_mod.split_2d(w, topo, 0)
+    assert rows.n_teams == 4 and rows.size == 4
+    assert [t.members for t in rows.teams[:2]] == [(0, 1, 2, 3), (4, 5, 6, 7)]
+    assert [t.members for t in cols.teams[:2]] == [(0, 4, 8, 12), (1, 5, 9, 13)]
+    # complement of rows IS the column grouping (interned member teams)
+    comp = rows.complement()
+    assert [t.members for t in comp.teams] == [t.members for t in cols.teams]
+    assert comp.complement() is rows
+
+
+# ---------------------------------------------------------------------------
+# pattern lifting: compile-once per (team, pairs), world-identical shim
+# ---------------------------------------------------------------------------
+
+def test_lift_caches_and_interns():
+    from repro.core.pattern import ring_pattern
+    t = team_mod.make_team([1, 4, 7, 2], N)
+    p = ring_pattern(4)
+    lifted = t.lift(p)
+    assert t.lift(p) is lifted                      # cached per (team, pairs)
+    assert lifted.pairs == ((1, 4), (2, 1), (4, 7), (7, 2))
+    # world-team lift is the interned world pattern itself
+    w = team_mod.team_world(4)
+    assert w.lift(ring_pattern(4)) is ring_pattern(4)
+
+
+def test_team_topology_view_prices_world_distances():
+    topo = epiphany3()
+    row1 = team_mod.split_2d(team_mod.team_world(16), topo, -1).teams[1]
+    tt = row1.topo_view(topo)
+    assert row1.topo_view(topo) is tt
+    # ranks 0..3 are world PEs 4..7 on one row: 3 hops end to end
+    assert tt.hops(0, 3) == topo.hops(4, 7) == 3.0
+    # pricing an un-lifted team schedule == pricing the lifted one
+    sched = coll.allreduce_schedule(4, 4096.0, "rd")
+    assert sched.time(tt, abmodel.EPIPHANY_NOC) == pytest.approx(
+        row1.lift_schedule(sched).time(topo, abmodel.EPIPHANY_NOC))
+
+
+# ---------------------------------------------------------------------------
+# team-scoped collectives (SIM): members reduce, non-members untouched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("members", [(1, 4, 7), (0, 2, 4, 6), (5, 2, 7)])
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_team_to_all_members_only(ctx, members, op):
+    t = team_mod.make_team(members, N)
+    x = _x(seed=3)
+    out = np.asarray(ctx.to_all(x, op, team=t))
+    fn = {"sum": np.sum, "max": np.max, "min": np.min}[op]
+    ref = np.asarray(x).copy()
+    red = fn(np.asarray(x)[list(members)], 0)
+    for m in members:
+        ref[m] = red
+    np.testing.assert_allclose(out, ref, rtol=2e-5)
+
+
+def test_team_to_all_rd_vs_ring_agree(ctx):
+    t = team_mod.make_team((0, 3, 5, 6), N)    # pow2 size, scattered PEs
+    x = _x(seed=4)
+    ring = np.asarray(ctx.to_all(x, "sum", team=t, algorithm="ring"))
+    rd = np.asarray(ctx.to_all(x, "sum", team=t, algorithm="rd"))
+    auto = np.asarray(ctx.to_all(x, "sum", team=t, algorithm="auto"))
+    np.testing.assert_allclose(ring, rd, rtol=2e-5)
+    assert (np.array_equal(auto, rd) or np.array_equal(auto, ring))
+
+
+def test_team_broadcast_root_is_team_rank(ctx):
+    t = team_mod.make_team((1, 4, 7), N)
+    x = _x(seed=5)
+    out = np.asarray(ctx.broadcast(x, root=2, team=t))   # team rank 2 = PE 7
+    ref = np.asarray(x).copy()
+    for m in (1, 4, 7):
+        ref[m] = np.asarray(x)[7]
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_team_fcollect_collect_team_rank_order(ctx):
+    t = team_mod.make_team((6, 1, 3), N)       # non-monotonic member order
+    x = _x(seed=6, w=2)
+    cat = np.asarray(x)[[6, 1, 3]].reshape(-1)
+    for out in (np.asarray(ctx.fcollect(x, team=t)),
+                np.asarray(ctx.collect(x, team=t))):
+        for m in (6, 1, 3):
+            np.testing.assert_array_equal(out[m], cat)
+        for pe in set(range(N)) - {6, 1, 3}:
+            np.testing.assert_array_equal(out[pe], 0)
+
+
+def test_team_alltoall_transpose(ctx):
+    t = team_mod.make_team((0, 2, 5), N)
+    blk = 2
+    x = jnp.asarray(np.random.RandomState(7).randn(N, 3 * blk)
+                    .astype(np.float32))
+    out = np.asarray(ctx.alltoall(x, team=t))
+    blocks = np.asarray(x)[[0, 2, 5]].reshape(3, 3, blk)
+    ref_members = blocks.transpose(1, 0, 2).reshape(3, 3 * blk)
+    for r, m in enumerate((0, 2, 5)):
+        np.testing.assert_array_equal(out[m], ref_members[r])
+
+
+def test_team_reduce_scatter_allgather_non_members_zero(ctx):
+    t = team_mod.make_team((0, 2, 5), N)
+    x = _x(seed=12)
+    own, info = ctx.reduce_scatter(x, "sum", team=t)
+    gathered = coll.allgather_unpad(ctx.net, own, info, team=t)
+    red = np.asarray(x)[[0, 2, 5]].sum(0)
+    for m in (0, 2, 5):
+        np.testing.assert_allclose(np.asarray(gathered)[m], red, rtol=2e-5)
+    for pe in set(range(N)) - {0, 2, 5}:
+        np.testing.assert_array_equal(np.asarray(own)[pe], 0)
+        np.testing.assert_array_equal(np.asarray(gathered)[pe], 0)
+
+
+def test_team_plus_hier_rejected(ctx):
+    t = team_mod.make_team((0, 1), N)
+    with pytest.raises(ValueError):
+        ctx.to_all(_x(), "sum", algorithm="hier", team=t)
+
+
+def test_non_covering_partition_never_selects_hier():
+    part = team_mod.TeamPartition([team_mod.make_team((0, 1), N),
+                                   team_mod.make_team((2, 3), N)])
+    assert not part.covers_world
+    algo = coll.choose_algorithm(N, float(1 << 22), epiphany3(),
+                                 abmodel.EPIPHANY_NOC, partition=part)
+    assert algo != "hier"
+    algo_c, _ = coll.choose_schedule(N, float(1 << 22), epiphany3(),
+                                     abmodel.EPIPHANY_NOC, partition=part)
+    assert algo_c != "hier"
+
+
+def test_team_barrier_uniform_token(ctx):
+    t = team_mod.make_team((0, 2, 5, 7), N)
+    tok = np.asarray(ctx.barrier(team=t))
+    assert len({tok[m] for m in (0, 2, 5, 7)}) == 1
+
+
+# ---------------------------------------------------------------------------
+# active-set shim: 1.3 triples resolve to the explicit-team schedules
+# ---------------------------------------------------------------------------
+
+def test_active_set_resolves_to_interned_team():
+    t = team_mod.from_active_set(1, 1, 3, N)   # start 1, stride 2, size 3
+    assert t.members == (1, 3, 5)
+    assert t is team_mod.split_strided(team_mod.team_world(N), 1, 2, 3)
+
+
+def test_to_all_active_set_matches_explicit_team(ctx):
+    x = _x(seed=8)
+    t = team_mod.from_active_set(0, 1, 4, N)
+    shim = ctx.to_all(x, "sum", PE_start=0, logPE_stride=1, PE_size=4)
+    explicit = ctx.to_all(x, "sum", team=t)
+    np.testing.assert_array_equal(np.asarray(shim), np.asarray(explicit))
+    # whole-world active set falls onto the flat path: identical to plain
+    world = ctx.to_all(x, "sum", PE_start=0, logPE_stride=0, PE_size=N)
+    np.testing.assert_array_equal(np.asarray(world),
+                                  np.asarray(ctx.to_all(x, "sum")))
+
+
+def test_to_all_rejects_team_and_active_set(ctx):
+    t = team_mod.make_team((0, 1), N)
+    with pytest.raises(ValueError):
+        ctx.to_all(_x(), "sum", team=t, PE_size=2)
+    with pytest.raises(ValueError):
+        ctx.to_all(_x(), "sum", logPE_stride=2)    # partial set: needs size
+
+
+# ---------------------------------------------------------------------------
+# hierarchical two-level allreduce: equivalence and selection
+# ---------------------------------------------------------------------------
+# Tolerance: hier reorders the float summation (per-team partials, then
+# cross-team) — results are allclose within a few ulps of the flat answer
+# (rtol 2e-5 for f32, like the flat rd-vs-ring tests) and EXACT for int
+# dtypes, where addition is associative.
+
+@pytest.mark.parametrize("shape", [(4, 4), (2, 3), (3, 3), (2, 8)])
+def test_allreduce_hier_matches_flat(shape):
+    topo = MeshTopology(shape=shape, torus=(False, False))
+    n = topo.n_pes
+    net = SimNetOps(n)
+    rows = team_mod.split_2d(team_mod.team_world(n), topo, -1)
+    x = _x(n=n, w=13, seed=9)
+    flat = np.tile(np.asarray(x).sum(0), (n, 1))
+    hier = coll.allreduce_hier(net, x, "sum", partition=rows)
+    np.testing.assert_allclose(np.asarray(hier), flat, rtol=2e-5)
+    # column partition works the same way
+    cols = team_mod.split_2d(team_mod.team_world(n), topo, 0)
+    hier_c = coll.allreduce_hier(net, x, "sum", partition=cols)
+    np.testing.assert_allclose(np.asarray(hier_c), flat, rtol=2e-5)
+
+
+def test_allreduce_hier_int_exact():
+    topo = epiphany3()
+    net = SimNetOps(16)
+    rows = team_mod.split_2d(team_mod.team_world(16), topo, -1)
+    x = jnp.asarray((np.arange(16 * 11) % 17).reshape(16, 11)
+                    .astype(np.int32))
+    hier = coll.allreduce_hier(net, x, "sum", partition=rows)
+    np.testing.assert_array_equal(np.asarray(hier),
+                                  np.tile(np.asarray(x).sum(0), (16, 1)))
+
+
+def test_allreduce_hier_max_and_weird_widths():
+    topo = epiphany3()
+    net = SimNetOps(16)
+    rows = team_mod.split_2d(team_mod.team_world(16), topo, -1)
+    for w in (1, 3, 16, 37):      # padding edge cases around K=4 chunks
+        x = _x(n=16, w=w, seed=w)
+        out = coll.allreduce_hier(net, x, "max", partition=rows)
+        np.testing.assert_allclose(
+            np.asarray(out), np.tile(np.asarray(x).max(0), (16, 1)),
+            rtol=1e-6)
+
+
+def test_hier_schedule_prices_what_executes():
+    topo = epiphany3()
+    rows = team_mod.split_2d(team_mod.team_world(16), topo, -1)
+    sched = coll.allreduce_hier_schedule(rows, 4096.0, topo=topo,
+                                         link=abmodel.EPIPHANY_NOC)
+    # K-1 RS + cross + K-1 AG stages, all world-compiled union patterns
+    assert len(sched.stages) >= 2 * (rows.size - 1) + 1
+    assert all(st.pattern.n_pes == 16 for st in sched.stages)
+    # intra stages move nbytes/K per member; stage hops priced on topo
+    assert sched.stages[0].nbytes == pytest.approx(4096.0 / rows.size)
+    assert sched.time(topo, abmodel.EPIPHANY_NOC) > 0
+
+
+def test_choose_algorithm_picks_hier_large_2d():
+    """The acceptance configuration: on a 2D mesh the cost model must
+    prefer the hierarchical schedule for large payloads (it keeps the
+    bulk bytes on intra-row links) and a flat algorithm for tiny ones."""
+    topo = epiphany3()
+    rows = team_mod.split_2d(team_mod.team_world(16), topo, -1)
+    link = abmodel.EPIPHANY_NOC
+    small = coll.choose_algorithm(16, 64.0, topo, link, partition=rows)
+    big = coll.choose_algorithm(16, float(1 << 20), topo, link,
+                                partition=rows)
+    assert small in ("rd", "ring")
+    assert big == "hier"
+    # and the pick is consistent with the schedules' own pricing
+    t_hier = coll.allreduce_hier_schedule(
+        rows, float(1 << 20), topo=topo, link=link).time(topo, link)
+    for algo in ("rd", "ring"):
+        assert t_hier <= coll.allreduce_schedule(
+            16, float(1 << 20), algo).time(topo, link) + 1e-12
+
+
+def test_choose_schedule_picks_hier_on_podded_mesh():
+    """choose_schedule weighs hier against CHUNKED flat execution too; on
+    a mesh with an expensive cross axis (the §8 pod story) hier must win
+    for large messages — the bench_teams acceptance configuration."""
+    topo = MeshTopology(shape=(8, 8), torus=(False, True),
+                        link_cost=(10.0, 1.0))
+    rows = team_mod.split_2d(team_mod.team_world(64), topo, -1)
+    algo, chunks = coll.choose_schedule(64, float(1 << 18), topo,
+                                        abmodel.ICI_V5E, partition=rows)
+    assert algo == "hier" and chunks == 1
+    small_algo, _ = coll.choose_schedule(64, 64.0, topo, abmodel.ICI_V5E,
+                                         partition=rows)
+    assert small_algo in ("rd", "ring")
+
+
+def test_allreduce_auto_with_partition_executes_hier(ctx):
+    topo = epiphany3()
+    net = SimNetOps(16)
+    rows = team_mod.split_2d(team_mod.team_world(16), topo, -1)
+    x = _x(n=16, w=1 << 16, seed=10)     # 256 KiB/PE: deep in hier territory
+    out = coll.allreduce(net, x, "sum", algorithm="auto", topo=topo,
+                         link=abmodel.EPIPHANY_NOC, partition=rows)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.tile(np.asarray(x).sum(0), (16, 1)),
+                               rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-context pending-op queues: quiet/fence isolation
+# ---------------------------------------------------------------------------
+
+def test_ctx_quiet_isolation(ctx):
+    x = _x()
+    c1 = ctx.ctx_create()
+    c2 = ctx.ctx_create()
+    f1 = c1.put_nbi(x, [(0, 1)])
+    f2 = c2.put_nbi(x, [(2, 3)])
+    fd = ctx.put_nbi(x, [(4, 5)])      # default context
+    assert (c1.pending_count, c2.pending_count, ctx.pending_count) \
+        == (1, 1, 1)
+    # quiet on ctx B leaves ctx A (and the default context) pending
+    c2.quiet()
+    assert f2.done and not f1.done and not fd.done
+    assert (c1.pending_count, c2.pending_count, ctx.pending_count) \
+        == (1, 0, 1)
+    # default-context quiet stays oblivious to created contexts
+    ctx.quiet()
+    assert fd.done and not f1.done
+    c1.quiet()
+    assert f1.done and c1.pending_count == 0
+    ref = np.asarray(x).copy()
+    ref[1] = ref[0]
+    np.testing.assert_allclose(np.asarray(f1.value), ref)
+
+
+def test_ctx_fence_scoped_to_context(ctx):
+    x = _x()
+    c1 = ctx.ctx_create()
+    f1 = c1.put_nbi(x, [(0, 3)])
+    f2 = c1.put_nbi(2 * x, [(1, 3)])   # same destination: fence chains
+    fd = ctx.put_nbi(x, [(6, 3)])      # default ctx, same dest PE — NOT
+    vals = c1.fence()                  # chained by c1's fence
+    assert len(vals) == 2 and c1.pending_count == 2
+    assert not (f1.done or f2.done) and not fd.done
+    assert ctx.pending_count == 1
+    c1.quiet()
+    ctx.quiet()
+    assert f1.done and f2.done and fd.done
+
+
+def test_ctx_quiet_rejects_foreign_futures(ctx):
+    x = _x()
+    c1 = ctx.ctx_create()
+    f = c1.put_nbi(x, [(0, 1)])
+    with pytest.raises(ValueError):
+        ctx.quiet(f)           # default context must not drain c1's op
+    assert not f.done and c1.pending_count == 1
+    c1.quiet()
+    assert f.done
+    # already-completed futures pass through (re-fence is harmless)
+    c1.quiet(f)
+
+
+def test_ctx_per_context_seq_numbers(ctx):
+    x = _x()
+    c1 = ctx.ctx_create()
+    c2 = ctx.ctx_create()
+    a = c1.put_nbi(x, [(0, 1)])
+    b = c2.put_nbi(x, [(0, 1)])
+    c = c1.put_nbi(x, [(2, 3)])
+    assert (a.seq, b.seq, c.seq) == (0, 0, 1)   # issue order per context
+    c1.quiet(), c2.quiet()
+
+
+def test_team_scoped_ctx_lifts_patterns(ctx):
+    t = team_mod.make_team((1, 4, 7), N)
+    tc = ctx.ctx_create(team=t)
+    x = _x(seed=11)
+    f = tc.put_nbi(x, [(0, 2)])        # team coords: world 1 -> 7
+    assert f.target_pes() == (7,)
+    tc.quiet()
+    ref = np.asarray(x).copy()
+    ref[7] = ref[1]
+    np.testing.assert_allclose(np.asarray(f.value), ref)
+    # team-scoped get: requester team rank 0 (PE 1) reads owner rank 1 (PE 4)
+    g = tc.get_nbi(x, [(0, 1)])
+    assert g.target_pes() == (1,)
+    tc.quiet()
+
+
+# ---------------------------------------------------------------------------
+# SPMD backend: teams, hier, and context isolation under shard_map
+# ---------------------------------------------------------------------------
+
+SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import spmd_ctx, sim_ctx, team as team_mod
+    from repro.core import collectives as coll
+    from repro.core.topology import MeshTopology
+
+    n = 8
+    mesh = jax.make_mesh((n,), ("pe",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    topo = MeshTopology(shape=(2, 4), torus=(False, False))
+    x = jnp.asarray(np.random.RandomState(0).randn(n, 24).astype(np.float32))
+    t = team_mod.make_team((1, 3, 4, 6), n)
+    rows = team_mod.split_2d(team_mod.team_world(n), topo, -1)
+
+    def run(fn):
+        return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(P("pe"),),
+                                     out_specs=P("pe")))(x)
+
+    # team to_all on SPMD == team to_all on SIM, both algorithms
+    for algo in ("rd", "ring"):
+        def body(xl, _algo=algo):
+            return spmd_ctx("pe").to_all(xl[0], "sum", algorithm=_algo,
+                                         team=t)[None]
+        got = np.asarray(run(body))
+        ref = np.asarray(sim_ctx(n).to_all(x, "sum", algorithm=algo, team=t))
+        assert np.allclose(got, ref, rtol=1e-5), algo
+
+    # active-set shim == explicit team under shard_map
+    def body_shim(xl):
+        c = spmd_ctx("pe")
+        a = c.to_all(xl[0], "sum", PE_start=1, logPE_stride=0, PE_size=4)
+        b = c.to_all(xl[0], "sum",
+                     team=team_mod.from_active_set(1, 0, 4, n))
+        return (a - b)[None]
+    assert np.allclose(np.asarray(run(body_shim)), 0.0)
+
+    # hierarchical allreduce == flat allreduce (rtol documented in §11)
+    def body_hier(xl):
+        net = spmd_ctx("pe").net
+        return coll.allreduce_hier(net, xl[0], "sum", partition=rows)[None]
+    got = np.asarray(run(body_hier))
+    ref = np.asarray(x).sum(0, keepdims=True)
+    assert np.allclose(got, ref, rtol=2e-5)
+
+    # ... and exact for ints
+    xi = jnp.asarray((np.arange(n * 12) % 7).reshape(n, 12).astype(np.int32))
+    def body_hier_int(xl):
+        net = spmd_ctx("pe").net
+        return coll.allreduce_hier(net, xl[0], "sum", partition=rows)[None]
+    got_i = np.asarray(jax.jit(jax.shard_map(
+        body_hier_int, mesh=mesh, in_specs=(P("pe"),),
+        out_specs=P("pe")))(xi))
+    assert (got_i == np.asarray(xi).sum(0, keepdims=True)).all()
+
+    # per-context quiet isolation inside shard_map
+    def body_ctx(xl):
+        c = spmd_ctx("pe")
+        c1, c2 = c.ctx_create(), c.ctx_create()
+        f1 = c1.put_nbi(xl[0], [(0, 1)])
+        f2 = c2.put_nbi(2 * xl[0], [(2, 3)])
+        c2.quiet()
+        assert f2.done and not f1.done
+        assert c1.pending_count == 1 and c2.pending_count == 0
+        assert c.pending_count == 0
+        c1.quiet()
+        assert f1.done
+        return (f1.value + f2.value)[None]
+    out = np.asarray(run(body_ctx))
+    ref = np.asarray(x) + 2 * np.asarray(x)
+    ref[1] = np.asarray(x)[0] + 2 * np.asarray(x)[1]
+    ref[3] = np.asarray(x)[3] + 2 * np.asarray(x)[2]
+    assert np.allclose(out, ref)
+    print("SPMD teams OK")
+""")
+
+
+def test_spmd_teams_hier_and_ctx_isolation():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", SPMD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "SPMD teams OK" in res.stdout

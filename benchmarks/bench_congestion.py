@@ -1,0 +1,177 @@
+"""Congestion model validation: predicted vs measured under link contention.
+
+The congestion-aware cost layer (DESIGN.md §12) prices a stage as
+
+    T = alpha + hop_s * max_hops + beta * nbytes * max_link_load
+
+with ``max_link_load`` the flow multiplicity through the hottest physical
+link under XY routing.  The plain SIM backend cannot see contention (a
+ppermute is one gather), so this bench runs on the congestion-faithful
+``NocSimNetOps``: every pattern executes as link-disjoint waves, the flows
+a real NoC could fly concurrently — measured wall time scales with the
+hot-link load the model prices.
+
+Sections:
+  1. contention calibration — the same payload pushed through patterns of
+     known hot-link load; fit the LinkModel `contention` factor
+     (abmodel.fit_contention) the way fit() recovers (alpha, beta).
+  2. embedded vs logical ring — measured allreduce wall time over message
+     sizes, the model's predictions, the crossover, and what
+     choose_schedule(embedding="auto") picks at each size (acceptance:
+     embedded wins at large sizes and the selector picks it).
+  3. rank remapping — max_link_load of the logical ring vs the snake
+     embedding vs a greedy optimize_embedding remap, plus the barrier
+     algorithm pricing (dissemination vs tree).
+
+  PYTHONPATH=src python -m benchmarks.bench_congestion
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import abmodel, collectives as coll, sim_ctx
+from repro.core.netops import NocSimNetOps
+from repro.core.pattern import ring_pattern
+from repro.core.topology import epiphany3
+
+from ._util import sized, time_fn as _time
+
+TOPO = epiphany3()
+N = TOPO.n_pes
+LINK = abmodel.EPIPHANY_NOC
+ROWS: list[tuple] = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+# -- 1. calibrate the contention factor from wave-level execution ------------
+
+def _stage(net, p, v):
+    """One executed ring-RS stage shape: receive + local combine.  The
+    combine consumer forces the transfer to materialize on BOTH sides —
+    a bare permutation gather is elided to a view change by XLA, which
+    would time the uncontended case at memcpy-zero cost."""
+    return v + net.ppermute(v, p)
+
+
+def calibrate_contention() -> float:
+    """Push the same per-PE payload through patterns of known hot-link
+    load and fit gamma: t(load) ~= t(1) * (1 + gamma*(load-1))."""
+    net = NocSimNetOps(N, topo=TOPO)
+    emb = TOPO.snake_order()
+    cases = [
+        ("ring_embedded", ring_pattern(N).relabel(emb, N)),   # load 1
+        ("ring_logical", ring_pattern(N)),                    # load 2
+        ("ring_offset8", ring_pattern(N, 8)),                 # load 4
+    ]
+    nbytes = 1 << 16
+    loads, times = [], []
+    for name, p in cases:
+        x = sized(nbytes, N)
+        t = _time(lambda v, _p=p: _stage(net, _p, v), x, iters=16)
+        load = p.max_link_load(TOPO)
+        waves = len(p.link_waves(TOPO))
+        loads.append(load)
+        times.append(t)
+        row(f"noc_stage_{name}", t * 1e6,
+            f"max_link_load={load:.0f} waves={waves}")
+    gamma = abmodel.fit_contention(loads, times)
+    row("contention_gamma", 0.0, f"gamma={gamma:.2f} (1.0=full serialization)")
+    return gamma
+
+
+# -- 2. embedded vs logical ring: predicted vs measured crossover ------------
+
+def bench_embedded_ring(gamma: float):
+    """Both the ring schedule and the model are STAGE-ADDITIVE (every ring
+    stage is the same interned pattern, stages serialize), so the
+    schedule's measured time is n_stages x one measured stage.  Timing a
+    single jitted stage keeps the measurement volume-honest — XLA elides
+    chained permutation gathers wholesale (a 30-deep chain of embedded
+    stages compiles to view changes), which would credit the embedding
+    with impossible speedups."""
+    link = abmodel.LinkModel(LINK.alpha_s, LINK.hop_s, LINK.bw_Bps,
+                             contention=gamma)
+    net = NocSimNetOps(N, topo=TOPO)
+    emb = TOPO.snake_order()
+    print("\nname,measured_us,derived (embedded vs logical ring allreduce, "
+          "stage-additive NoC-wave measurement)")
+    results = []
+    for s in (256, 4096, 65536, 1 << 18):
+        sched_log = coll.allreduce_schedule(N, s, "ring")
+        sched_emb = coll.allreduce_schedule(N, s, "ring_emb", embedding=emb)
+        x = sized(max(s // N, 4), N)          # ring stages move 1/N chunks
+        k = len(sched_log.stages)
+        t_log = k * _time(
+            lambda v: _stage(net, sched_log.stages[0].pattern, v), x,
+            iters=16)
+        t_emb = k * _time(
+            lambda v: _stage(net, sched_emb.stages[0].pattern, v), x,
+            iters=16)
+        p_log = sched_log.time(TOPO, link)
+        p_emb = sched_emb.time(TOPO, link)
+        algo, chunks = coll.choose_schedule(N, float(s), TOPO, link,
+                                            embedding="auto")
+        results.append((s, t_log, t_emb))
+        row(f"allreduce_ring_{s}B", t_log * 1e6,
+            f"emb={t_emb * 1e6:.2f}us speedup=x{t_log / t_emb:.2f} "
+            f"pred=x{p_log / p_emb:.2f} auto_pick={algo}/c{chunks}")
+    # crossover: the smallest size from which the embedded ring STAYS
+    # faster (scanned large-to-small — tiny sizes are alpha/noise bound)
+    crossover = None
+    for s, t_log, t_emb in reversed(results):
+        if t_emb < t_log:
+            crossover = s
+        else:
+            break
+    row("embedded_ring_crossover", 0.0,
+        f"embedded_faster_from={crossover}B" if crossover is not None
+        else "WARN_no_crossover")
+
+    # bit-identity spot check: embedded vs logical full executions on int
+    # payloads, on the wave-serial backend
+    ctx = sim_ctx(N, TOPO, noc=True)
+    xi = np.random.RandomState(0).randint(-99, 99, (N, 257)).astype(np.int32)
+    a = np.asarray(ctx.to_all(xi, "sum", algorithm="ring"))
+    b = np.asarray(ctx.to_all(xi, "sum", algorithm="ring_emb"))
+    row("embedded_bit_identity_int", 0.0,
+        "OK" if np.array_equal(a, b) else "FAIL")
+
+
+# -- 3. the remap pass + barrier pricing -------------------------------------
+
+def bench_remap():
+    print("\nname,us,derived (rank remapping / barrier pricing)")
+    ring = coll.allreduce_schedule(N, float(1 << 20), "ring")
+    emb = TOPO.snake_order()
+    ring_emb = coll.allreduce_schedule(N, float(1 << 20), "ring_emb",
+                                       embedding=emb)
+    l_log = max(st.pattern.max_link_load(TOPO) for st in ring.stages)
+    l_emb = max(st.pattern.max_link_load(TOPO) for st in ring_emb.stages)
+    remapped, perm = coll.optimize_embedding(ring, TOPO, LINK)
+    l_rem = max(st.pattern.max_link_load(TOPO) for st in remapped.stages)
+    row("ring_max_link_load", 0.0,
+        f"logical={l_log:.0f} snake={l_emb:.0f} greedy_remap={l_rem:.0f}")
+    order = coll.choose_embedding(N, TOPO, LINK)
+    row("choose_embedding", 0.0,
+        "identity" if order is None else f"order[0:4]={list(order[:4])}")
+    for algo in ("dissem", "tree"):
+        sched = coll.barrier_schedule(N, algo)
+        row(f"barrier_{algo}", sched.time(TOPO, LINK) * 1e6,
+            f"stages={len(sched)} "
+            f"max_load={max(st.pattern.max_link_load(TOPO) for st in sched.stages):.0f}")
+    row("choose_barrier", 0.0, coll.choose_barrier(N, TOPO, LINK))
+
+
+def main():
+    print("name,us,derived")
+    gamma = calibrate_contention()
+    bench_embedded_ring(gamma)
+    bench_remap()
+
+
+if __name__ == "__main__":
+    main()

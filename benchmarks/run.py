@@ -25,6 +25,13 @@ def main() -> None:
     except Exception as e:  # keep the rest of the harness running
         print(f"pattern bench skipped: {e}")
 
+    print("\n== congestion model: predicted vs measured under contention ==")
+    try:
+        from . import bench_congestion
+        bench_congestion.main()
+    except Exception as e:  # keep the rest of the harness running
+        print(f"congestion bench skipped: {e}")
+
     print("\n== substrate A/B (ARL shmem vs XLA 'eLib') ==")
     try:
         from . import bench_substrate

@@ -1,7 +1,7 @@
 """ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
 from . import (abmodel, collectives, heap, netops, pattern, shmem, team,
                topology)
-from .netops import NetOps, SimNetOps, SpmdNetOps
+from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, Schedule, Stage, as_pattern, compile_pattern
 from .shmem import Ctx, ShmemContext, sim_ctx, spmd_ctx
 from .team import (Team, TeamPartition, from_active_set, make_team, split_2d,
@@ -10,7 +10,8 @@ from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
 
 __all__ = [
     "abmodel", "collectives", "heap", "netops", "pattern", "shmem", "team",
-    "topology", "NetOps", "SimNetOps", "SpmdNetOps", "CommPattern",
+    "topology", "NetOps", "NocSimNetOps", "SimNetOps", "SpmdNetOps",
+    "CommPattern",
     "Schedule", "Stage", "as_pattern", "compile_pattern", "Ctx",
     "ShmemContext", "sim_ctx", "spmd_ctx", "Team", "TeamPartition",
     "from_active_set", "make_team", "split_2d", "split_strided",

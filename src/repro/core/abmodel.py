@@ -53,14 +53,29 @@ def fit(sizes_bytes, times_s) -> ABFit:
 
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
-    """Per-link alpha-beta constants."""
+    """Per-link alpha-beta constants, congestion-aware (eq. 1 extended):
+
+        T = alpha + hop_s * max_hops + beta * nbytes * load_eff
+        load_eff = 1 + contention * (max_link_load - 1)
+
+    ``max_link_load`` is the stage's flow multiplicity through its hottest
+    physical link under XY routing (``CommPattern.max_link_load``): flows
+    sharing a link serialize there, so the stage's bandwidth term scales
+    with the hottest link's occupancy, not just the payload.  `contention`
+    calibrates how fully they serialize (1.0 = strict serialization, 0.0 =
+    the old hop-only model); :func:`fit_contention` recovers it from
+    measurements the way :func:`fit` recovers (alpha, beta)."""
 
     alpha_s: float        # per-message launch latency
     hop_s: float          # added latency per mesh hop
     bw_Bps: float         # per-link bandwidth
+    contention: float = 1.0   # fraction of hot-link serialization realized
 
-    def time(self, nbytes: float, hops: float = 1.0) -> float:
-        return self.alpha_s + self.hop_s * hops + nbytes / self.bw_Bps
+    def time(self, nbytes: float, hops: float = 1.0,
+             link_load: float = 1.0) -> float:
+        load_eff = 1.0 + self.contention * (max(link_load, 1.0) - 1.0)
+        return (self.alpha_s + self.hop_s * hops
+                + nbytes * load_eff / self.bw_Bps)
 
 
 # TPU v5e ICI: ~50 GB/s/link, ~1 us software launch, ~0.1 us/hop.
@@ -75,18 +90,26 @@ EPIPHANY_NOC = LinkModel(alpha_s=1e-7, hop_s=2.5e-9, bw_Bps=2.4e9)
 EPIPHANY_NOC_GET = LinkModel(alpha_s=1e-7, hop_s=5e-9, bw_Bps=0.24e9)
 
 
-def stage_time(nbytes: float, hops: float, link: LinkModel = ICI_V5E) -> float:
-    return link.time(nbytes, hops)
+def stage_time(nbytes: float, hops: float, link: LinkModel = ICI_V5E,
+               link_load: float = 1.0) -> float:
+    return link.time(nbytes, hops, link_load)
 
 
-def modeled_collective_time(stages: list[tuple[float, float]],
+def _stage3(stage) -> tuple[float, float, float]:
+    """Accept both the congestion-aware (bytes, hops, load) descriptor and
+    the legacy (bytes, hops) pair (load defaults to 1 — no contention)."""
+    b, h, *rest = stage
+    return b, h, (rest[0] if rest else 1.0)
+
+
+def modeled_collective_time(stages: list[tuple],
                             link: LinkModel = ICI_V5E) -> float:
-    """Sum of (nbytes, hops) stage costs — collectives built from ppermute
-    stages are serialized, so stage times add."""
-    return sum(link.time(b, h) for b, h in stages)
+    """Sum of (nbytes, hops[, max_link_load]) stage costs — collectives
+    built from ppermute stages are serialized, so stage times add."""
+    return sum(link.time(*_stage3(st)) for st in stages)
 
 
-def modeled_pipelined_time(stages: list[tuple[float, float]], n_chunks: int,
+def modeled_pipelined_time(stages: list[tuple], n_chunks: int,
                            link: LinkModel = ICI_V5E) -> float:
     """Chunked (double-buffered) schedule execution time (DESIGN.md §10).
 
@@ -103,14 +126,35 @@ def modeled_pipelined_time(stages: list[tuple[float, float]], n_chunks: int,
     monolithic time — the classic pipelined-tree gain."""
     if n_chunks <= 1 or not stages:
         return modeled_collective_time(stages, link)
-    per = [link.time(b / n_chunks, h) for b, h in stages]
+    per = [link.time(b / n_chunks, h, ld)
+           for b, h, ld in map(_stage3, stages)]
     return sum(per) + (n_chunks - 1) * max(per)
 
 
-def choose_chunks(stages: list[tuple[float, float]],
+def fit_contention(link_loads, times_s) -> float:
+    """Recover the LinkModel `contention` factor from measurements of the
+    SAME transfer at different hot-link multiplicities: least-squares fit
+    of  t(load) = t(1) * (1 + gamma * (load - 1))  with t(1) taken from
+    the load==1 samples.  Returns gamma clipped to [0, 1]."""
+    loads = np.asarray(link_loads, dtype=np.float64)
+    times = np.asarray(times_s, dtype=np.float64)
+    base = times[loads <= 1.0]
+    if len(base) == 0:
+        raise ValueError("fit_contention needs at least one load==1 sample")
+    t1 = float(base.mean())
+    x = loads - 1.0
+    denom = float(x @ x)
+    if denom == 0.0 or t1 <= 0.0:
+        return 0.0
+    gamma = float(x @ (times / t1 - 1.0)) / denom
+    return min(max(gamma, 0.0), 1.0)
+
+
+def choose_chunks(stages: list[tuple],
                   link: LinkModel = ICI_V5E, max_chunks: int = 32) -> int:
     """Pick the chunk count (power of two, 1 = monolithic) minimizing the
-    modeled pipelined time of a schedule's (bytes, hops) stage costs."""
+    modeled pipelined time of a schedule's (bytes, hops[, max_link_load])
+    stage costs."""
     candidates = [1 << k for k in range(max(1, max_chunks).bit_length())
                   if (1 << k) <= max_chunks]
     return min(candidates,

@@ -28,6 +28,7 @@ All functions take the PE-local array (under SPMD) or the PE-stacked array
 from __future__ import annotations
 
 import math
+import threading
 from typing import Callable, Sequence
 
 import jax
@@ -37,7 +38,9 @@ from jax import lax
 
 from .netops import NetOps, SimNetOps
 from .pattern import (CommPattern, Schedule, Stage, as_pattern,
-                      binomial_stage_pattern, ring_pattern, xor_pattern)
+                      binomial_stage_pattern, intern_get, ring_pattern,
+                      xor_pattern)
+from . import team as team_mod
 
 
 def _lmap(net: NetOps, f: Callable, *xs):
@@ -110,14 +113,276 @@ def _mask_out(net: NetOps, mask, out, keep=None):
 
 
 # ---------------------------------------------------------------------------
+# mesh embeddings — ring collectives in snake coordinates (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+# An embedding is a world-covering rank order: ring position i is served by
+# PE order[i].  With `topo.snake_order()` every logical ring hop becomes ONE
+# physical hop and (on meshes with a Hamiltonian cycle) no two ring flows
+# share a physical link — max_link_load 1 vs the logical ring's contended
+# row-wrap columns.  Execution reuses the team machinery: the order IS a
+# covering Team, so lifted patterns are interned and shared with the
+# schedules that price them.
+
+def _embedding_team(order: Sequence[int], world_n: int):
+    return team_mod.make_team(order, world_n)
+
+
+def embedding_team(embedding, topo, n: int, link=None):
+    """Resolve the embedding knob straight to its world-covering Team (the
+    coordinate system embedded rings execute in), or None when the
+    identity/logical ring is the embedding.  The Comm/grad-sync layers use
+    this to run reduce-scatter + allgather pairs in embedded coordinates."""
+    order = _resolve_embedding(embedding, topo, n, link)
+    return None if order is None else _embedding_team(order, n)
+
+
+def _resolve_embedding(embedding, topo, n: int, link=None):
+    """The embedding knob: None -> off; "snake" -> the topology's snake
+    order; "auto" -> cost-model pick (snake vs a greedy remap vs identity,
+    `choose_embedding`); an explicit order passes through validated.
+    Returns a world rank order, or None when the identity (logical ring)
+    is the embedding."""
+    if embedding is None:
+        return None
+    if isinstance(embedding, str):
+        if embedding not in ("auto", "snake"):
+            # validate BEFORE the topo gate: a typo'd knob must raise even
+            # when no usable topology is attached (it would otherwise be
+            # silently read as "off" exactly when the user can't notice)
+            raise ValueError(f"unknown embedding {embedding!r} "
+                             "(None | 'auto' | 'snake' | explicit order)")
+        if topo is None or getattr(topo, "n_pes", None) != n:
+            return None
+        if embedding == "auto":
+            return choose_embedding(n, topo, link)
+        order = topo.snake_order()
+        return None if order == tuple(range(n)) else order
+    order = tuple(int(p) for p in embedding)
+    if sorted(order) != list(range(n)):
+        raise ValueError(f"embedding must be a permutation of 0..{n - 1}")
+    return None if order == tuple(range(n)) else order
+
+
+# Representative payload for embedding selection: large enough that the
+# bandwidth (congestion) term dominates, where embeddings matter.
+EMBED_REF_BYTES = float(1 << 20)
+# Greedy remap is O(n^2) schedule evaluations per pass — worth it on
+# chip-scale meshes, not on pod-scale ones (where the snake already wins).
+EMBED_GREEDY_MAX_PES = 64
+
+_EMBED_LOCK = threading.Lock()
+_EMBED_CACHE: dict = {}
+_EMBED_CACHE_MAX = 256
+
+
+def choose_embedding(n: int, topo, link=None):
+    """Cost-model embedding selection: price the ring allreduce schedule
+    under the identity, the snake order, and (small meshes) a greedy
+    `optimize_embedding` remap seeded from the snake; return the winning
+    order, or None when the logical ring already prices best.  Cached per
+    (topo, n, link)."""
+    if topo is None or getattr(topo, "n_pes", None) != n or n <= 2:
+        return None
+
+    def _build():
+        def _sched(order):
+            if order is None:
+                return allreduce_schedule(n, EMBED_REF_BYTES, "ring")
+            return allreduce_schedule(n, EMBED_REF_BYTES, "ring_emb",
+                                      embedding=order)
+
+        snake = topo.snake_order()
+        candidates: list[tuple[int, ...] | None] = [None]
+        if snake != tuple(range(n)):
+            candidates.append(snake)
+            if n <= EMBED_GREEDY_MAX_PES:
+                _, perm = optimize_embedding(_sched(snake), topo, link)
+                greedy = tuple(perm[p] for p in snake)
+                if greedy not in candidates:
+                    candidates.append(greedy)
+        # boxed so an identity result (None) still caches — intern_get
+        # treats a bare None as a miss
+        return (min(candidates, key=lambda o: _sched(o).time(topo, link)),)
+
+    return intern_get(_EMBED_CACHE, _EMBED_LOCK, _EMBED_CACHE_MAX,
+                      (topo, n, link), _build)[0]
+
+
+def optimize_embedding(schedule: Schedule, topo, link=None,
+                       max_passes: int = 2
+                       ) -> tuple[Schedule, tuple[int, ...]]:
+    """Greedy rank remap: hill-climb pairwise PE swaps that lower the
+    congestion-priced time (dominated by ``max_link_load``) of the
+    schedule's stages on `topo`.  Returns ``(remapped_schedule, perm)``
+    with ``perm[old_pe] = new_pe`` — stage patterns are relabeled through
+    `perm` (`CommPattern.relabel`, interned as usual).
+
+    The remapped schedule is a *different coordinate system*, not a
+    drop-in replacement: run it by treating `perm` as an embedding (the
+    covering Team whose rank r is PE ``perm[order[r]]``), exactly how the
+    `embedding=` knob executes — data placement follows the relabel."""
+    if not schedule.stages:
+        return schedule, ()
+    from . import abmodel
+    n = schedule.stages[0].pattern.n_pes
+    perm = list(range(n))
+    lk = link if link is not None else abmodel.ICI_V5E
+    # ring schedules repeat ONE (pattern, bytes) stage 2(n-1) times —
+    # price each unique stage once and weight by its count, instead of
+    # rebuilding the full Schedule per candidate swap
+    uniq: dict[tuple[CommPattern, float], int] = {}
+    for st in schedule.stages:
+        key = (st.pattern, st.nbytes)
+        uniq[key] = uniq.get(key, 0) + 1
+
+    def _priced(p: Sequence[int]) -> float:
+        # score the remapped pairs directly — interning a throwaway
+        # CommPattern per candidate swap would churn the global pattern
+        # cache (and its device/hop caches) with never-reused entries
+        total = 0.0
+        for (pat, nb), cnt in uniq.items():
+            pairs = [(p[s], p[d]) for s, d in pat.pairs]
+            if topo is None:
+                hops = load = 1.0 if pairs else 0.0
+            else:
+                hops = max((topo.hops(s, d) for s, d in pairs), default=0.0)
+                loads: dict[tuple[int, int], float] = {}
+                for s, d in pairs:
+                    if s == d:
+                        continue
+                    for u, v in topo.route(s, d):
+                        key = (u, v) if u < v else (v, u)
+                        loads[key] = loads.get(key, 0.0) + 1.0
+                load = max(loads.values()) if loads \
+                    else (1.0 if pairs else 0.0)
+            total += cnt * lk.time(nb, hops, load)
+        return total
+
+    def _relabel(p: Sequence[int]) -> Schedule:
+        return Schedule(f"{schedule.name}.remap", tuple(
+            Stage(st.pattern.relabel(p, n), st.nbytes)
+            for st in schedule.stages))
+
+    best_t = _priced(perm)
+    for _ in range(max_passes):
+        improved = False
+        for i in range(n):
+            for j in range(i + 1, n):
+                perm[i], perm[j] = perm[j], perm[i]
+                t = _priced(perm)
+                if t < best_t - 1e-15:
+                    best_t, improved = t, True
+                else:
+                    perm[i], perm[j] = perm[j], perm[i]
+        if not improved:
+            break
+    return _relabel(perm), tuple(perm)
+
+
+def embed_team(team, topo, order=None):
+    """The embedding computed in TEAM coordinates: reorder a team's
+    members along the world embedding order (the topology's snake by
+    default; pass `order` to honor an explicit/greedy world order), so
+    the team-relative ring lifts to near-neighbor world flows
+    (DESIGN.md §12).  Interned (teams are); returns the same team when
+    the order already matches or no usable topology is given."""
+    if order is None:
+        if topo is None or getattr(topo, "n_pes", None) != team.world_n:
+            return team
+        order = topo.snake_order()
+    pos = {pe: i for i, pe in enumerate(order)}
+    members = tuple(sorted(team.members, key=lambda p: pos[p]))
+    if members == team.members:
+        return team
+    return team_mod.make_team(members, team.world_n)
+
+
+def _team_embed_view(team, topo, embedding, link=None):
+    """Resolve the embedding knob to the embedded TEAM view, honoring the
+    same world-order semantics as the flat path: strings are validated
+    ("auto"/"snake"; typos raise), explicit world orders are honored, a
+    knob resolving to the identity leaves the team untouched, and
+    embedding=None (an explicit algorithm="ring_emb" request) takes the
+    snake default."""
+    if embedding is None:
+        return embed_team(team, topo)
+    order = _resolve_embedding(embedding, topo, team.world_n, link)
+    if order is None:
+        return team                  # knob resolves to the identity
+    return embed_team(team, topo, order)
+
+
+_EMBED_PART_LOCK = threading.Lock()
+_EMBED_PART_CACHE: dict = {}
+
+
+def _embed_partition(partition, topo, embedding=None, link=None):
+    """embed_team over every member team of a partition (the hierarchical
+    allreduce's intra phases then ride embedded rings), against the SAME
+    world order the flat path would resolve from the knob — an explicit
+    or "auto"/greedy order is honored, not silently replaced by the
+    snake.  Cached per (partition, topo, order) so lift caches survive
+    across calls."""
+    if topo is None:
+        return partition
+    order = _resolve_embedding(embedding, topo, partition.world_n, link) \
+        if embedding is not None else None
+    if embedding is not None and order is None:
+        return partition            # knob resolves to the identity
+
+    def _build():
+        teams = [embed_team(t, topo, order) for t in partition.teams]
+        if all(a is b for a, b in zip(teams, partition.teams)):
+            return partition
+        return team_mod.TeamPartition(teams)
+
+    return intern_get(_EMBED_PART_CACHE, _EMBED_PART_LOCK, 256,
+                      (partition, topo, order), _build)
+
+
+# ---------------------------------------------------------------------------
 # schedule builders — one per paper algorithm
 # ---------------------------------------------------------------------------
 
-def barrier_schedule(n: int) -> Schedule:
-    """Dissemination: round k exchanges 8 bytes of sync state with PE
-    (i + 2^k) — the paper's 8*log2(N) sync array."""
+def _ring_stage_pattern(n: int, embedding=None) -> CommPattern:
+    """The offset-1 ring stage, optionally in embedding coordinates:
+    ring position i (PE embedding[i]) sends to position i+1.  The lifted
+    object is the SAME interned pattern the embedded executor runs."""
+    p = ring_pattern(n)
+    return p if embedding is None else p.relabel(embedding, n)
+
+
+def barrier_schedule(n: int, algorithm: str = "dissem") -> Schedule:
+    """"dissem": round k exchanges 8 bytes of sync state with PE (i + 2^k)
+    — the paper's 8*log2(N) sync array.  "tree": binomial gather to PE 0
+    then binomial broadcast — 2x the rounds but each round is a sparse
+    tree stage, the low-congestion candidate `choose_barrier` prices
+    against dissemination's dense all-PE exchanges."""
+    if algorithm == "tree":
+        gather = [Stage(binomial_stage_pattern(n, 1 << k).inverse, 8.0)
+                  for k in range(_ceil_log2(n))]
+        bcast = [Stage(binomial_stage_pattern(n, 1 << k), 8.0)
+                 for k in reversed(range(_ceil_log2(n)))]
+        return Schedule("barrier.tree", tuple(gather + bcast))
     return Schedule("barrier.dissemination", tuple(
         Stage(ring_pattern(n, 1 << k), 8.0) for k in range(_ceil_log2(n))))
+
+
+def choose_barrier(n: int, topo=None, link=None, team=None) -> str:
+    """Price the dissemination barrier against the tree barrier with the
+    congestion-aware model and return the cheaper ("dissem" | "tree").
+    With `team`, candidates are lifted to the world flows that execute
+    before pricing (team ranks are not world PEs)."""
+    if n <= 1:
+        return "dissem"
+
+    def _priced(a: str) -> float:
+        s = barrier_schedule(n, a)
+        if team is not None:
+            s = team.lift_schedule(s)
+        return s.time(topo, link)
+
+    return min(("dissem", "tree"), key=_priced)
 
 
 def broadcast_schedule(n: int, nbytes: float = 0.0, root: int = 0) -> Schedule:
@@ -133,45 +398,58 @@ def broadcast_schedule(n: int, nbytes: float = 0.0, root: int = 0) -> Schedule:
 
 
 def fcollect_schedule(n: int, nbytes: float = 0.0,
-                      algorithm: str | None = None) -> Schedule:
+                      algorithm: str | None = None,
+                      embedding=None) -> Schedule:
     """Allgather of `nbytes` blocks: recursive doubling (payload doubles
-    per stage) or ring (n-1 single-block stages)."""
+    per stage), ring (n-1 single-block stages), or the mesh-embedded ring
+    ("ring_emb": every hop one physical hop over `embedding`)."""
     algo = algorithm or ("rd" if _is_pow2(n) else "ring")
     if algo == "rd":
         return Schedule("fcollect.rd", tuple(
             Stage(xor_pattern(n, 1 << k), nbytes * (1 << k))
             for k in range(_ceil_log2(n))))
-    return Schedule("fcollect.ring", tuple(
-        Stage(ring_pattern(n), float(nbytes)) for _ in range(max(n - 1, 0))))
+    emb = embedding if algo == "ring_emb" else None
+    return Schedule("fcollect.ring_emb" if emb is not None
+                    else "fcollect.ring", tuple(
+                        Stage(_ring_stage_pattern(n, emb), float(nbytes))
+                        for _ in range(max(n - 1, 0))))
 
 
-def reduce_scatter_schedule(n: int, nbytes: float = 0.0) -> Schedule:
-    """Ring reduce-scatter: n-1 stages, each moving one 1/n chunk."""
+def reduce_scatter_schedule(n: int, nbytes: float = 0.0,
+                            embedding=None) -> Schedule:
+    """Ring reduce-scatter: n-1 stages, each moving one 1/n chunk (over
+    the embedding order when one is given)."""
     return Schedule("reduce_scatter.ring", tuple(
-        Stage(ring_pattern(n), nbytes / max(n, 1))
+        Stage(_ring_stage_pattern(n, embedding), nbytes / max(n, 1))
         for _ in range(max(n - 1, 0))))
 
 
-def allgather_schedule(n: int, nbytes: float = 0.0) -> Schedule:
+def allgather_schedule(n: int, nbytes: float = 0.0,
+                       embedding=None) -> Schedule:
     """Ring allgather of the scattered 1/n chunks (reduce-scatter's dual)."""
     return Schedule("allgather.ring", tuple(
-        Stage(ring_pattern(n), nbytes / max(n, 1))
+        Stage(_ring_stage_pattern(n, embedding), nbytes / max(n, 1))
         for _ in range(max(n - 1, 0))))
 
 
 def allreduce_schedule(n: int, nbytes: float = 0.0,
-                       algorithm: str | None = None) -> Schedule:
+                       algorithm: str | None = None,
+                       embedding=None) -> Schedule:
     """to_all: recursive doubling (log2 N full-buffer stages,
-    alpha-optimal) or ring reduce-scatter + allgather (~2x buffer total,
-    bandwidth-optimal)."""
+    alpha-optimal), ring reduce-scatter + allgather (~2x buffer total,
+    bandwidth-optimal), or the mesh-embedded ring ("ring_emb": the same
+    ring in snake coordinates — one physical hop per stage, hot-link
+    load 1 where the topology admits a Hamiltonian cycle)."""
     algo = algorithm or ("rd" if _is_pow2(n) else "ring")
     if algo == "rd":
         return Schedule("allreduce.rd", tuple(
             Stage(xor_pattern(n, 1 << k), float(nbytes))
             for k in range(_ceil_log2(n))))
-    return Schedule("allreduce.ring",
-                    reduce_scatter_schedule(n, nbytes).stages
-                    + allgather_schedule(n, nbytes).stages)
+    emb = embedding if algo == "ring_emb" else None
+    return Schedule("allreduce.ring_emb" if emb is not None
+                    else "allreduce.ring",
+                    reduce_scatter_schedule(n, nbytes, emb).stages
+                    + allgather_schedule(n, nbytes, emb).stages)
 
 
 def alltoall_schedule(n: int, nbytes_total: float = 0.0) -> Schedule:
@@ -191,7 +469,7 @@ _SELECTABLE: dict[str, Callable[..., Schedule]] = {
 
 def allreduce_hier_schedule(partition, nbytes: float = 0.0,
                             cross_algorithm: str | None = None,
-                            topo=None, link=None) -> Schedule:
+                            topo=None, link=None, embedding=None) -> Schedule:
     """The hierarchical two-level allreduce as ONE world Schedule
     (DESIGN.md §11): intra-team ring reduce-scatter, cross-team allreduce
     of the owned 1/K chunk over the peer teams (the partition's
@@ -200,7 +478,14 @@ def allreduce_hier_schedule(partition, nbytes: float = 0.0,
     teams fly their stage-k exchange concurrently; stage payloads and hop
     costs come from the lifted objects that execute.  cross_algorithm
     None cost-model-selects the cross step (rd's log2(M) chunk sends vs
-    the ring's ~2x chunk bytes), same as the executor."""
+    the ring's ~2x chunk bytes), same as the executor.  `embedding`
+    non-None reorders each member team along the topology's snake
+    (`embed_team`) before lifting — the intra phases then ride embedded
+    rings, mirroring the executor's `_embed_partition`."""
+    if embedding is not None:
+        partition = _embed_partition(partition, topo,
+                                     embedding=embedding,
+                                     link=link)
     K = partition.size
     peers = partition.complement()
     if cross_algorithm is None:
@@ -218,7 +503,8 @@ def allreduce_hier_schedule(partition, nbytes: float = 0.0,
 
 def allreduce_hier(net: NetOps, x, op: str = "sum",
                    combine: Callable | None = None, partition=None,
-                   cross_algorithm: str | None = None, topo=None, link=None):
+                   cross_algorithm: str | None = None, topo=None, link=None,
+                   embedding=None):
     """Hierarchical two-level allreduce over a covering TeamPartition:
 
       1. intra-team ring reduce-scatter — team rank r ends up owning the
@@ -240,6 +526,10 @@ def allreduce_hier(net: NetOps, x, op: str = "sum",
         raise ValueError("allreduce_hier needs a partition covering the "
                          "world (every PE contributes)")
     fn = combine or OPS[op]
+    if embedding is not None:
+        partition = _embed_partition(partition, topo,
+                                     embedding=embedding,
+                                     link=link)
     peers = partition.complement()
     if cross_algorithm is None:
         # cost-model-select the cross step from the UNPADDED chunk bytes,
@@ -260,37 +550,56 @@ def allreduce_hier(net: NetOps, x, op: str = "sum",
 
 def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
                      collective: str = "allreduce", team=None,
-                     partition=None) -> str:
+                     partition=None, embedding=None) -> str:
     """Cost-model algorithm selection: price each candidate schedule with
-    the alpha-beta model (eq. 1) on `topo`/`link` and take the cheapest.
+    the congestion-aware alpha-beta model on `topo`/`link` and take the
+    cheapest.
 
     This replaces the hand-tuned byte-threshold switch: recursive doubling
     pays log2(N) full-payload sends (alpha-optimal), the ring pays ~2x the
     payload in 2(N-1) chunk sends (bandwidth-optimal); where the cross-over
-    falls depends on alpha, beta AND the mesh hop costs, which is exactly
-    what the model prices.
+    falls depends on alpha, beta AND the mesh hop/contention costs, which
+    is exactly what the model prices.
 
     With `team`, candidates are priced in team coordinates (lifted to the
     world patterns that execute, so team hop costs are the members' world
     distances).  With `partition` (allreduce only), the hierarchical
     two-level schedule joins the candidate set — "hier" wins whenever
-    keeping the bulk bytes on intra-team links beats the flat ring."""
+    keeping the bulk bytes on intra-team links beats the flat ring.  With
+    `embedding` enabled ("auto"/"snake"/an order), the mesh-embedded ring
+    "ring_emb" joins too (DESIGN.md §12) — one physical hop per stage,
+    hot-link load 1 where the mesh admits a Hamiltonian cycle."""
     if team is not None:
         n = team.size
     if n <= 1:
         return "ring"
     build = _SELECTABLE[collective]
+    emb_view = None          # the embedded TEAM view (team path only)
+    emb = None               # the world embedding order (flat path only)
+    if team is not None:
+        if embedding is not None:
+            reordered = _team_embed_view(team, topo, embedding, link)
+            emb_view = None if reordered is team else reordered
+    else:
+        emb = _resolve_embedding(embedding, topo, n, link)
 
     def _priced(a: str) -> float:
         if a == "hier":
             return allreduce_hier_schedule(
-                partition, nbytes, topo=topo, link=link).time(topo, link)
-        s = build(n, nbytes, algorithm=a)
+                partition, nbytes, topo=topo, link=link,
+                embedding=embedding).time(topo, link)
         if team is not None:
-            s = team.lift_schedule(s)
-        return s.time(topo, link)
+            view = emb_view if a == "ring_emb" else team
+            algo = "ring" if a == "ring_emb" else a
+            return view.lift_schedule(
+                build(n, nbytes, algorithm=algo)).time(topo, link)
+        return build(n, nbytes, algorithm=a,
+                     embedding=emb if a == "ring_emb" else None
+                     ).time(topo, link)
 
     candidates = ["ring"] + (["rd"] if _is_pow2(n) else [])
+    if emb is not None or emb_view is not None:
+        candidates.append("ring_emb")
     if (partition is not None and team is None and collective == "allreduce"
             and partition.covers_world and partition.n_teams > 1
             and partition.size > 1):
@@ -306,7 +615,7 @@ PIPELINE_MAX_CHUNKS = 16
 def choose_schedule(n: int, nbytes: float, topo=None, link=None,
                     collective: str = "allreduce",
                     max_chunks: int = PIPELINE_MAX_CHUNKS,
-                    partition=None) -> tuple[str, int]:
+                    partition=None, embedding=None) -> tuple[str, int]:
     """choose_algorithm extended over the pipelining axis: price every
     candidate (algorithm, chunk-count) pair with the alpha-beta model —
     `abmodel.modeled_pipelined_time` for chunked, eq. 1 for monolithic —
@@ -317,15 +626,22 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
     alpha) the chunk count grows toward `max_chunks`.  With `partition`
     (allreduce only) the hierarchical schedule competes too — priced
     monolithic, since team-relative execution does not pipeline
-    (DESIGN.md §11)."""
+    (DESIGN.md §11).  With `embedding` enabled, the mesh-embedded ring
+    competes at every chunk count (it pipelines like the logical ring,
+    DESIGN.md §12)."""
     from . import abmodel
     if n <= 1:
         return "ring", 1
     link = link if link is not None else abmodel.ICI_V5E
     build = _SELECTABLE[collective]
+    emb = _resolve_embedding(embedding, topo, n, link)
     best, best_t = ("ring", 1), math.inf
-    for algo in ["ring"] + (["rd"] if _is_pow2(n) else []):
-        cost = build(n, nbytes, algorithm=algo).cost(topo)
+    algos = ["ring"] + (["rd"] if _is_pow2(n) else []) \
+        + (["ring_emb"] if emb is not None else [])
+    for algo in algos:
+        cost = build(n, nbytes, algorithm=algo,
+                     embedding=emb if algo == "ring_emb" else None
+                     ).cost(topo)
         c = abmodel.choose_chunks(cost, link, max_chunks=max_chunks)
         t = abmodel.modeled_pipelined_time(cost, c, link)
         if t < best_t:
@@ -334,7 +650,8 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
             and partition.covers_world and partition.n_teams > 1
             and partition.size > 1):
         t = allreduce_hier_schedule(
-            partition, nbytes, topo=topo, link=link).time(topo, link)
+            partition, nbytes, topo=topo, link=link,
+            embedding=embedding).time(topo, link)
         if t < best_t:
             best, best_t = ("hier", 1), t
     return best
@@ -344,8 +661,8 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
 # cost descriptors — thin views over the same schedules that execute
 # ---------------------------------------------------------------------------
 
-def barrier_stages(n: int, topo=None) -> list[tuple[float, float]]:
-    """[(bytes, hops)] per stage for the cost model."""
+def barrier_stages(n: int, topo=None) -> list[tuple[float, float, float]]:
+    """[(bytes, hops, max_link_load)] per stage for the cost model."""
     return barrier_schedule(n).cost(topo)
 
 
@@ -453,18 +770,34 @@ def _interleave_blocks(outs, bounds, n: int, ax: int):
 # barrier
 # ---------------------------------------------------------------------------
 
-def barrier(net: NetOps, token=None, team=None):
-    """Dissemination barrier: round k exchanges a token with rank
-    (i + 2^k) of the group (`team`-relative ranks when a team is given).
+def barrier(net: NetOps, token=None, team=None, algorithm: str | None = None,
+            topo=None, link=None):
+    """Software barrier: dissemination (default — round k exchanges a
+    token with rank (i + 2^k) of the group) or "tree" (binomial gather to
+    rank 0, then binomial broadcast — sparser rounds, the low-congestion
+    alternative); "auto" prices the two with the congestion model
+    (`choose_barrier`).  `team`-relative ranks when a team is given.
 
     Returns a scalar token; thread it into downstream computation to order
     operations (the SPMD analogue of 'all cores reached this line')."""
     _, n, lift, _ = _team_view(net, team)
+    algo = algorithm or "dissem"
+    if algo == "auto":
+        algo = choose_barrier(n, topo, link, team=team)
     tok = jnp.zeros((), jnp.int32) if token is None else token
     if isinstance(net, SimNetOps):
         tok = jnp.broadcast_to(tok, (net.n_pes,) + tok.shape[1:]) \
             if tok.ndim == 0 else tok
-    for st in barrier_schedule(n).stages:
+    stages = barrier_schedule(n, algo).stages
+    if algo == "tree":
+        n_gather = _ceil_log2(n)
+        for st in stages[:n_gather]:          # reduce partial sums to rank 0
+            tok = tok + net.ppermute(tok, lift(st.pattern))
+        for st in stages[n_gather:]:          # broadcast the root's token
+            p = lift(st.pattern)
+            tok = net.select(p, net.ppermute(tok, p), tok)
+        return tok
+    for st in stages:
         tok = tok + net.ppermute(tok, lift(st.pattern))
     return tok
 
@@ -505,37 +838,126 @@ def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
 # ---------------------------------------------------------------------------
 
 def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
-             pipeline_chunks=None, topo=None, link=None, team=None):
+             pipeline_chunks=None, topo=None, link=None, team=None,
+             embedding=None):
     """Concatenate equal-size blocks from all group members along `axis`.
 
     Recursive doubling (log2 N stages, doubling message size) when the
     group size is a power of two, ring otherwise — the paper's
-    fcollect/collect split.  `pipeline_chunks` > 1 executes the schedule
-    chunked/double-buffered (bit-identical; DESIGN.md §10).  With `team`,
-    blocks concatenate in TEAM-rank order; non-members return zeros
-    (team collectives run monolithic, §11)."""
+    fcollect/collect split.  "auto" cost-model-selects; "ring_emb" (or an
+    enabled `embedding` with the ring) runs the MESH-EMBEDDED ring: the
+    ring in snake coordinates, with one static block permutation restoring
+    PE order afterwards — the output is bit-identical to the logical ring
+    (pure data movement), only the flows change (DESIGN.md §12).
+    `pipeline_chunks` > 1 executes the schedule chunked/double-buffered
+    (bit-identical; §10).  With `team`, blocks concatenate in TEAM-rank
+    order; non-members return zeros (team collectives run monolithic,
+    §11)."""
     _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
-    algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+    emb = _resolve_embedding(embedding, topo, n, link) \
+        if team is None else None
     nbytes = _payload_bytes(net, x)
+    if algorithm == "auto":
+        # teams take the raw knob (choose_algorithm prices the embedded
+        # team view); the flat path passes the resolved order
+        algo = choose_algorithm(n, nbytes, topo, link, collective="fcollect",
+                                team=team,
+                                embedding=emb if team is None else embedding)
+    else:
+        algo = algorithm or ("rd" if _is_pow2(n) else "ring")
+        if algorithm is None and algo == "ring" and (
+                emb is not None
+                or (team is not None and embedding is not None)):
+            algo = "ring_emb"       # default policy + enabled embedding
+    if algo == "ring_emb":
+        if team is not None:        # embedding in team coordinates (§12)
+            return _collect_ring_team_embedded(net, x, axis, team, topo,
+                                               embedding, link)
+        if emb is None:
+            # explicit algorithm= without the knob: snake default (as
+            # allreduce); stays "ring" when no usable topology exists
+            emb = _resolve_embedding("snake", topo, n, link)
+        if emb is None:
+            algo = "ring"                     # no usable embedding: logical
     chunks = 1 if team is not None else _resolve_chunks(
-        pipeline_chunks, fcollect_schedule(n, nbytes, algo), topo, link)
+        pipeline_chunks,
+        fcollect_schedule(n, nbytes, algo,
+                          embedding=emb if algo == "ring_emb" else None),
+        topo, link)
+    if algo == "ring_emb":
+        return _collect_ring_embedded(net, x, axis, emb, n_chunks=chunks)
     if algo == "rd":
         return _fcollect_rd(net, x, axis, n_chunks=chunks, team=team)
     return _collect_ring(net, x, axis, n_chunks=chunks, team=team)
 
 
 def collect(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
-            topo=None, link=None, team=None):
-    """The paper's linear-scaling ring collect."""
+            topo=None, link=None, team=None, embedding=None):
+    """The paper's linear-scaling ring collect (mesh-embedded when
+    `embedding` is enabled — bit-identical output, near-neighbor flows)."""
     _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
+    if team is not None and embedding is not None:
+        return _collect_ring_team_embedded(net, x, axis, team, topo,
+                                           embedding, link)
+    emb = _resolve_embedding(embedding, topo, n, link) \
+        if team is None else None
     chunks = 1 if team is not None else _resolve_chunks(
         pipeline_chunks,
-        fcollect_schedule(n, _payload_bytes(net, x), "ring"), topo, link)
+        fcollect_schedule(n, _payload_bytes(net, x),
+                          "ring_emb" if emb is not None else "ring",
+                          embedding=emb), topo, link)
+    if emb is not None:
+        return _collect_ring_embedded(net, x, axis, emb, n_chunks=chunks)
     return _collect_ring(net, x, axis, n_chunks=chunks, team=team)
+
+
+def _permute_blocks_static(net: NetOps, x, idx_np, n: int, axis: int):
+    """out block t = x block idx_np[t] — a HOST-constant block gather
+    (same for every PE), the post-pass that restores world block order
+    after an embedded ring ran in snake coordinates."""
+    sim = isinstance(net, SimNetOps)
+    ax = axis + (1 if sim else 0)
+    shp = x.shape
+    vb = x.reshape(shp[:ax] + (n, shp[ax] // n) + shp[ax + 1:])
+    out = jnp.take(vb, jnp.asarray(np.asarray(idx_np)), axis=ax)
+    return out.reshape(shp)
+
+
+def _collect_ring_team_embedded(net: NetOps, x, axis: int, team, topo,
+                                embedding=None, link=None):
+    """Team-scoped embedded ring collect: run the ring over the team
+    REORDERED along the world embedding order (`_team_embed_view` — the
+    embedding in team coordinates), then statically restore blocks to the
+    ORIGINAL team's rank order, so the output layout is identical to the
+    plain team path (bitwise — pure data movement).  Falls back to the
+    plain team ring when no usable topology is attached."""
+    view = _team_embed_view(team, topo, embedding, link)
+    out = _collect_ring(net, x, axis, team=view)
+    if view is team:
+        return out
+    # view path leaves block t = member with VIEW rank t; original team
+    # rank j's member sits at view position view.rank_np[members[j]]
+    idx = np.array([view.rank_np[m] for m in team.members])
+    return _permute_blocks_static(net, out, idx, team.size, axis)
+
+
+def _collect_ring_embedded(net: NetOps, x, axis: int, order,
+                           n_chunks: int = 1):
+    """Ring collect over the embedding order: run the team-relative ring
+    in snake coordinates (every hop one physical hop), then restore PE
+    block order with one static block permutation.  Pure data movement —
+    bitwise identical to the logical ring's output; chunks pipeline like
+    the logical ring (the embedding team covers the world)."""
+    n = len(order)
+    emb_team = _embedding_team(order, n)
+    out = _collect_ring(net, x, axis, n_chunks=n_chunks, team=emb_team)
+    # team path leaves block t = PE order[t]'s data; PE j's block sits at
+    # position rank_np[j]
+    return _permute_blocks_static(net, out, emb_team.rank_np, n, axis)
 
 
 def _out_zeros_like(x, axis, n, pe_leading):
@@ -606,7 +1028,9 @@ def _collect_ring(net: NetOps, x, axis: int, n_chunks: int = 1, team=None):
     # out block i = stacked part (rank - i) mod n
     idx = (rank[..., None] - jnp.arange(n)) % n if sim \
         else (rank - jnp.arange(n)) % n
-    if team is not None:
+    if team is not None and (n_chunks <= 1 or mask is not None):
+        # proper-subset teams run monolithic (§11); covering teams — the
+        # embedded ring's coordinate system — fall through and may chunk
         parts = [x]
         cur = x
         for st in stages:
@@ -622,7 +1046,7 @@ def _collect_ring(net: NetOps, x, axis: int, n_chunks: int = 1, team=None):
         pieces = [[_slice_axis(x, lo, hi, ax)] for lo, hi in bounds]
 
         def stage(c, k, parts):
-            return parts + [net.ppermute(parts[-1], stages[k].pattern)]
+            return parts + [net.ppermute(parts[-1], lift(stages[k].pattern))]
 
         outs = []
         for parts in _software_pipeline(pieces, len(stages), stage):
@@ -683,7 +1107,8 @@ RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: the old hand-tuned switch point,
 
 def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
               algorithm: str | None = None, topo=None, link=None,
-              pipeline_chunks=None, team=None, partition=None):
+              pipeline_chunks=None, team=None, partition=None,
+              embedding=None):
     """shmem_TYPE_OP_to_all.
 
     Algorithm selection generalizes the paper's PE-count switch (§3.6:
@@ -703,7 +1128,15 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
     `pipeline_chunks` > 1 executes the chosen schedule chunked and
     double-buffered (bit-identical to monolithic; DESIGN.md §10);
     "auto" for BOTH knobs prices every (algorithm, chunk-count) pair
-    (`choose_schedule`) and runs the cheapest."""
+    (`choose_schedule`) and runs the cheapest.
+
+    `embedding` ("auto" / "snake" / an explicit rank order) enables the
+    MESH-EMBEDDED ring (DESIGN.md §12): the same ring algorithm run in
+    snake coordinates, so every stage is one physical hop and (meshes
+    with a Hamiltonian cycle) no two flows share a link.  It joins the
+    "auto" candidate set as "ring_emb" and re-coordinates default-policy
+    rings; results are exact for int dtypes and allclose for floats (the
+    ring summation order follows the embedding)."""
     fn = combine or OPS[op]
     nbytes = _payload_bytes(net, x)
     if team is not None:
@@ -716,34 +1149,66 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
         if n == 1:
             return x
         if algorithm == "auto":
-            algo = choose_algorithm(n, nbytes, topo, link, team=team)
+            algo = choose_algorithm(n, nbytes, topo, link, team=team,
+                                    embedding=embedding)
         elif algorithm in (None, "paper"):
             algo = "rd" if _is_pow2(n) else "ring"
+            if algorithm is None and algo == "ring" and embedding is not None:
+                algo = "ring_emb"
         else:
             algo = algorithm
+        if algo == "ring_emb":
+            # the embedding in team coordinates: the reordered team IS the
+            # embedded ring (same members, snake-adjacent rank order) —
+            # also for an explicit algorithm= without the knob, mirroring
+            # the flat path's snake default
+            return _allreduce_team(
+                net, x, fn, "ring",
+                _team_embed_view(team, topo, embedding, link))
         return _allreduce_team(net, x, fn, algo, team)
     n = net.n_pes
     if n == 1:
         return x
     if algorithm == "hier":
         return allreduce_hier(net, x, op, combine=combine,
-                              partition=partition, topo=topo, link=link)
+                              partition=partition, topo=topo, link=link,
+                              embedding=embedding)
+    emb = _resolve_embedding(embedding, topo, n, link)
+    if algorithm == "ring_emb" and emb is None:
+        # explicit algorithm= without the knob: default to the snake, and
+        # resolve BEFORE chunk selection so choose_chunks prices the
+        # embedded stages that actually execute
+        emb = _resolve_embedding("snake", topo, n, link)
     if algorithm == "auto" and pipeline_chunks == "auto":
         algo, chunks = choose_schedule(n, nbytes, topo, link,
-                                       partition=partition)
+                                       partition=partition, embedding=emb)
     else:
         if algorithm == "auto":
             algo = choose_algorithm(n, nbytes, topo, link,
-                                    partition=partition)
+                                    partition=partition, embedding=emb)
         elif algorithm is None:
             algo = "rd" if _is_pow2(n) else "ring"
+            if algo == "ring" and emb is not None:
+                algo = "ring_emb"   # default policy + enabled embedding
         else:
             algo = algorithm
         chunks = 1 if algo == "hier" else _resolve_chunks(
-            pipeline_chunks, allreduce_schedule(n, nbytes, algo), topo, link)
+            pipeline_chunks,
+            allreduce_schedule(n, nbytes, algo, embedding=emb), topo, link)
     if algo == "hier":
         return allreduce_hier(net, x, op, combine=combine,
-                              partition=partition, topo=topo, link=link)
+                              partition=partition, topo=topo, link=link,
+                              embedding=embedding)
+    if algo == "ring_emb":
+        if emb is None:
+            algo = "ring"           # no usable embedding: logical ring
+        else:
+            emb_team = _embedding_team(emb, n)
+            if chunks > 1:
+                return _allreduce_ring_pipelined(net, x, fn, chunks,
+                                                 team=emb_team)
+            rs, info = _reduce_scatter_ring(net, x, fn, team=emb_team)
+            return allgather_unpad(net, rs, info, team=emb_team)
     if algo == "rd":
         stages = allreduce_schedule(n, nbytes, "rd").stages
         if chunks > 1:
@@ -788,27 +1253,31 @@ def _allreduce_rd_pipelined(net: NetOps, x, fn, stages, n_chunks: int):
     return restore(_software_pipeline(pieces, len(stages), stage))
 
 
-def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int):
+def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int, team=None):
     """Ring reduce-scatter + allgather, chunked WITHIN the owned 1/n block
     so every element keeps its monolithic block index — and therefore its
     exact reduction order (bit-identical to the eager path).  The fused
     pipeline lets chunk i's allgather stages overlap chunk i+1's
-    reduce-scatter stages."""
-    n = net.n_pes
+    reduce-scatter stages.
+
+    `team` must be a WORLD-COVERING team (an embedding): the ring then
+    runs in its rank coordinates — the mesh-embedded pipelined allreduce
+    — with patterns lifted to the world flows that execute."""
+    rank, n, lift, mask = _team_view(net, team)
+    assert mask is None, "pipelined ring needs a world-covering group"
     sim = isinstance(net, SimNetOps)
     orig_shape = x.shape[1:] if sim else x.shape
     size = int(np.prod(orig_shape))
     chunk = -(-size // n)
     padded = chunk * n
-    pe = net.my_pe()
 
     def flatpad(v):
         f = v.reshape(-1)
         return jnp.pad(f, (0, padded - size))
 
     buf = _lmap(net, flatpad, x)
-    idx = (pe[..., None] + jnp.arange(n)) % n if sim \
-        else (pe + jnp.arange(n)) % n
+    idx = (rank[..., None] + jnp.arange(n)) % n if sim \
+        else (rank + jnp.arange(n)) % n
     r = _take_blocks(net, buf, idx, n, 0)
 
     nbytes = _payload_bytes(net, x)
@@ -825,16 +1294,16 @@ def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int):
         cur, parts = state
         if k < len(rs):
             j = k + 1
-            cur = net.ppermute(cur, rs[k].pattern)
+            cur = net.ppermute(cur, lift(rs[k].pattern))
             cur = fn(piece_of(n - j, lo, hi), cur)
             return (cur, (cur,) if k == len(rs) - 1 else parts)
-        cur = net.ppermute(cur, ag[k - len(rs)].pattern)
+        cur = net.ppermute(cur, lift(ag[k - len(rs)].pattern))
         return (cur, parts + (cur,))
 
     init = [(piece_of(0, lo, hi), ()) for lo, hi in bounds]
     finals = _software_pipeline(init, len(rs) + len(ag), stage)
-    idx2 = (pe[..., None] + 1 - jnp.arange(n)) % n if sim \
-        else (pe + 1 - jnp.arange(n)) % n
+    idx2 = (rank[..., None] + 1 - jnp.arange(n)) % n if sim \
+        else (rank + 1 - jnp.arange(n)) % n
     outs = []
     for _, parts in finals:
         stacked_c = jnp.concatenate(parts, axis=-1)

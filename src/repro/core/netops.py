@@ -115,8 +115,9 @@ class SimNetOps(NetOps):
         return idx.reshape(idx.shape + (1,) * (v.ndim - 1))
 
     def ppermute(self, x, perm):
-        has_np, idx_np = as_pattern(perm, self.n_pes).gather_arrays()
-        has, gather_idx = jnp.asarray(has_np), jnp.asarray(idx_np)
+        # device-resident index arrays are cached per interned pattern —
+        # the hot path no longer re-uploads host indices every call
+        has, gather_idx = as_pattern(perm, self.n_pes).gather_arrays_device()
 
         def one(v):
             recv = v[gather_idx]
@@ -133,6 +134,65 @@ class SimNetOps(NetOps):
             return jnp.where(mm, x, y)
 
         return jax.tree.map(one, a, b)
+
+
+@dataclasses.dataclass
+class NocSimNetOps(SimNetOps):
+    """Congestion-faithful simulation: a ppermute moves one gather-row per
+    link-disjoint WAVE of its pattern (``CommPattern.link_waves``) — the
+    flows a real NoC could fly concurrently share a wave, contending
+    flows land in later waves, the way the eMesh serializes transmissions
+    through a shared physical link.  Results are bit-identical to
+    :class:`SimNetOps` (destinations are disjoint across waves,
+    non-destinations receive zeros), but measured wall time scales with
+    the pattern's hot-link multiplicity — what lets
+    ``benchmarks/bench_congestion.py`` validate the congestion term of
+    the alpha-beta model against an execution, not just against itself.
+
+    All waves run as ONE stacked gather (wave results then reduced over
+    the wave axis): a chain of per-wave gathers feeding adds triggers an
+    exponential XLA CPU compile blow-up on deep schedules — the stacked
+    form keeps compiles linear while still moving waves-x the data.  The
+    single-wave case takes the same stacked shape and every stage output
+    is an optimization_barrier, so XLA cannot fuse/recompose stages and
+    the measured time differences are data-volume-driven, not
+    fusion-luck-driven."""
+
+    topo: "object" = None
+    _stack_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _wave_arrays(self, p: CommPattern):
+        got = self._stack_cache.get(p)
+        if got is None:
+            import jax as _jax
+            waves = p.link_waves(self.topo)
+            has = np.concatenate([w.gather_arrays()[0] for w in waves])
+            idx = np.concatenate([w.gather_arrays()[1] for w in waves])
+            with _jax.ensure_compile_time_eval():
+                got = (len(waves), jnp.asarray(has), jnp.asarray(idx))
+            self._stack_cache[p] = got
+        return got
+
+    def ppermute(self, x, perm):
+        from jax import lax
+        p = as_pattern(perm, self.n_pes)
+        if not p.pairs:                  # empty pattern: zeros, like base
+            return super().ppermute(x, p)
+        n_waves, has, idx = self._wave_arrays(p)
+
+        def one(v):
+            recv = v[idx]                              # (W*n_pes, ...)
+            mask = self._expand_pe_index(has, v)
+            recv = jnp.where(mask, recv, jnp.zeros_like(recv))
+            stacked = recv.reshape((n_waves, self.n_pes) + v.shape[1:])
+            # keep the payload dtype: sum() would promote sub-32-bit ints
+            # (lossless cast — wave destinations are disjoint, so at most
+            # one wave contributes per slot)
+            out = stacked.any(0) if v.dtype == jnp.bool_ \
+                else stacked.sum(0).astype(v.dtype)
+            return lax.optimization_barrier(out)
+
+        return jax.tree.map(one, x)
 
 
 # -- per-PE dynamic slicing helpers (work under both backends) --------------

@@ -21,8 +21,9 @@ are identity-stable (``p.inverse.inverse is p``).
 
 :class:`Schedule` stacks compiled patterns into the multi-stage plans the
 collectives execute; each :class:`Stage` carries its payload bytes so the
-``(bytes, hops)`` cost descriptor is derived from the very object that
-runs — there is no hand-maintained parallel cost function to drift.
+``(bytes, hops, max_link_load)`` cost descriptor is derived from the very
+object that runs — there is no hand-maintained parallel cost function to
+drift.
 """
 from __future__ import annotations
 
@@ -58,6 +59,7 @@ class CommPattern:
     __slots__ = (
         "pairs", "n_pes", "dst_mask", "src_mask", "src_for_dst",
         "_inverse", "_hops_cache", "_device_cache", "_rounds_cache",
+        "_jnp_cache", "_link_cache", "_wave_cache",
     )
 
     def __init__(self, pairs: tuple[tuple[int, int], ...], n_pes: int,
@@ -83,6 +85,9 @@ class CommPattern:
         self._inverse: CommPattern | None = None
         self._hops_cache: dict[MeshTopology, np.ndarray] = {}
         self._device_cache: tuple | None = None
+        self._jnp_cache: tuple | None = None
+        self._link_cache: dict = {}
+        self._wave_cache: dict = {}
         self._rounds_cache: tuple[tuple[tuple[int, int], ...], ...] | None = None
 
     # -- structure ----------------------------------------------------------
@@ -124,6 +129,24 @@ class CommPattern:
             idx.setflags(write=False)
             self._device_cache = (has, idx)
         return self._device_cache
+
+    def gather_arrays_device(self) -> tuple:
+        """The :meth:`gather_arrays` pair as device-resident ``jnp``
+        arrays, built once per pattern, so the SIM backend's hot path
+        stops re-uploading the host indices on every ``ppermute`` call.
+
+        A plain ``jnp.asarray`` mid-trace would stage a device_put and
+        cache that trace's TRACER (the hazard the gather_arrays docstring
+        names); ``jax.ensure_compile_time_eval()`` forces a concrete
+        constant regardless of the caller's trace context, which is safe
+        to cache and share across traces."""
+        if self._jnp_cache is None:
+            import jax
+            import jax.numpy as jnp
+            has, idx = self.gather_arrays()
+            with jax.ensure_compile_time_eval():
+                self._jnp_cache = (jnp.asarray(has), jnp.asarray(idx))
+        return self._jnp_cache
 
     def unique_src_rounds(self) -> tuple[tuple[tuple[int, int], ...], ...]:
         """The pairs split into rounds with unique sources.
@@ -182,6 +205,76 @@ class CommPattern:
         """Sum of edge hop counts — the stage's aggregate link occupancy
         (the congestion/energy term, not the latency term)."""
         return float(self.pair_hops(topo).sum())
+
+    def link_loads(self, topo) -> dict[tuple[int, int], float]:
+        """Per-physical-link FLOW MULTIPLICITY of this pattern under the
+        topology's dimension-ordered routing (``topo.route``) — how many
+        flows cross each link, unweighted (per-dimension link costs stay
+        in the hop/latency term; weighting loads too would double-price
+        slow links, and multiplicity is what ``link_waves`` serializes).
+
+        Keys are canonical undirected links ``(min_pe, max_pe)``: the two
+        directions of a mesh link share router switching/arbitration, so
+        counter-flows contend — the conservative model, and the one under
+        which the paper's farthest-first ordering and the snake embedding
+        are visible on small meshes (a purely directed count calls the
+        4x4 logical ring congestion-free).  Cached per (pattern, topo)
+        like the hop caches; the returned dict is shared — don't mutate."""
+        cached = self._link_cache.get(topo)
+        if cached is None:
+            loads: dict[tuple[int, int], float] = {}
+            for s, d in self.pairs:
+                if s == d:
+                    continue
+                for u, v in topo.route(s, d):
+                    key = (u, v) if u < v else (v, u)
+                    loads[key] = loads.get(key, 0.0) + 1.0
+            cached = loads
+            self._link_cache[topo] = cached
+        return cached
+
+    def max_link_load(self, topo) -> float:
+        """The congestion metric: flow multiplicity through the hottest
+        physical link — the factor by which the stage's payload serializes
+        there.  1.0 with no topology (flat network: every pair its own
+        link) or when every routed link carries a single flow."""
+        if topo is None:
+            return 1.0 if self.pairs else 0.0
+        loads = self.link_loads(topo)
+        return max(loads.values()) if loads else (1.0 if self.pairs else 0.0)
+
+    def link_waves(self, topo) -> tuple["CommPattern", ...]:
+        """The pairs split greedily into sub-patterns whose routes are
+        link-disjoint.  A congestion-faithful executor (netops.NocSimNetOps)
+        runs one wave at a time — the flows a real NoC could fly
+        concurrently — so measured wall time scales with contention the
+        way ``max_link_load`` prices it.  Destinations are disjoint across
+        waves (unique per pattern), so wave results combine losslessly.
+        Cached per (pattern, topo); single wave == no contention."""
+        cached = self._wave_cache.get(topo)
+        if cached is None:
+            waves: list[list[tuple[int, int]]] = []
+            used: list[set[tuple[int, int]]] = []
+            # farthest-first (paper §3.6): packing the longest routes
+            # first keeps the greedy coloring at (or near) the hot-link
+            # load bound instead of fragmenting long flows across waves
+            order = self.pairs if topo is None else sorted(
+                self.pairs, key=lambda p: -topo.hops(p[0], p[1]))
+            for s, d in order:
+                links = {(u, v) if u < v else (v, u)
+                         for u, v in (topo.route(s, d) if topo is not None
+                                      else ())}
+                for w, u in zip(waves, used):
+                    if not (links & u):
+                        w.append((s, d))
+                        u |= links
+                        break
+                else:
+                    waves.append([(s, d)])
+                    used.append(set(links))
+            cached = tuple(compile_pattern(w, self.n_pes) for w in waves)
+            self._wave_cache[topo] = cached
+        return cached
 
 
 _COMPILE_TOKEN = object()
@@ -271,9 +364,13 @@ class Stage:
     pattern: CommPattern
     nbytes: float
 
-    def cost(self, topo: MeshTopology | None = None) -> tuple[float, float]:
-        """(bytes, hops) — the alpha-beta model's stage descriptor."""
-        return (float(self.nbytes), self.pattern.max_hops(topo))
+    def cost(self, topo: MeshTopology | None = None
+             ) -> tuple[float, float, float]:
+        """(bytes, hops, max_link_load) — the alpha-beta model's stage
+        descriptor: worst-path latency AND hottest-link serialization
+        (``abmodel.LinkModel.time`` prices all three terms)."""
+        return (float(self.nbytes), self.pattern.max_hops(topo),
+                self.pattern.max_link_load(topo))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -294,8 +391,9 @@ class Schedule:
     def __iter__(self) -> Iterable[Stage]:
         return iter(self.stages)
 
-    def cost(self, topo: MeshTopology | None = None) -> list[tuple[float, float]]:
-        """[(bytes, hops)] per stage — feed to
+    def cost(self, topo: MeshTopology | None = None
+             ) -> list[tuple[float, float, float]]:
+        """[(bytes, hops, max_link_load)] per stage — feed to
         `abmodel.modeled_collective_time`."""
         return [st.cost(topo) for st in self.stages]
 

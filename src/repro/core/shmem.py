@@ -33,7 +33,7 @@ from jax import lax
 
 from . import collectives as coll
 from . import team as team_mod
-from .netops import NetOps, SimNetOps, SpmdNetOps
+from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, PatternLike, as_pattern
 from .topology import MeshTopology
 
@@ -206,7 +206,7 @@ class ShmemContext:
     """One PE's view of the library (SPMD) or the whole chip's (SIM)."""
 
     def __init__(self, net: NetOps, topo: MeshTopology | None = None,
-                 use_wand_barrier: bool = False, link=None):
+                 use_wand_barrier: bool = False, link=None, embedding=None):
         self.net = net
         self.topo = topo
         self.use_wand_barrier = use_wand_barrier
@@ -214,6 +214,11 @@ class ShmemContext:
         # (None = abmodel.ICI_V5E); pair with topo so selection and the
         # benchmarks' derived column agree on constants.
         self.link = link
+        # ring embedding policy for this context's collectives (DESIGN.md
+        # §12): None = logical rings; "auto"/"snake"/an explicit rank
+        # order run ring algorithms in mesh-embedded coordinates (and
+        # "auto" selection prices the embedded candidates).
+        self.embedding = embedding
         # The default communication context: ShmemContext-level nbi RMA,
         # quiet and fence run on it, so shmem_quiet stays oblivious to
         # traffic issued on explicitly-created contexts (DESIGN.md §11).
@@ -368,8 +373,12 @@ class ShmemContext:
             return self.net.axis_psum(tok)
         return coll.barrier(self.net, token)
 
-    def barrier(self, token=None, team=None):
-        return coll.barrier(self.net, token, team=team)
+    def barrier(self, token=None, team=None, algorithm=None):
+        """algorithm: None/"dissem" (the paper's dissemination barrier),
+        "tree" (binomial gather + broadcast), or "auto" (congestion-model
+        pick between the two)."""
+        return coll.barrier(self.net, token, team=team, algorithm=algorithm,
+                            topo=self.topo, link=self.link)
 
     def broadcast(self, x, root: int = 0, pipeline_chunks=None, team=None):
         """With `team`, `root` is a TEAM rank; non-members keep x."""
@@ -380,13 +389,15 @@ class ShmemContext:
     def collect(self, x, axis: int = 0, pipeline_chunks=None, team=None):
         return coll.collect(self.net, x, axis,
                             pipeline_chunks=pipeline_chunks,
-                            topo=self.topo, link=self.link, team=team)
+                            topo=self.topo, link=self.link, team=team,
+                            embedding=self.embedding)
 
     def fcollect(self, x, axis: int = 0, algorithm=None,
                  pipeline_chunks=None, team=None):
         return coll.fcollect(self.net, x, axis, algorithm,
                              pipeline_chunks=pipeline_chunks,
-                             topo=self.topo, link=self.link, team=team)
+                             topo=self.topo, link=self.link, team=team,
+                             embedding=self.embedding)
 
     def to_all(self, x, op: str = "sum", algorithm=None,
                pipeline_chunks=None, team=None, partition=None,
@@ -408,7 +419,8 @@ class ShmemContext:
         return coll.allreduce(self.net, x, op, algorithm=algorithm,
                               topo=self.topo, link=self.link,
                               pipeline_chunks=pipeline_chunks,
-                              team=team, partition=partition)
+                              team=team, partition=partition,
+                              embedding=self.embedding)
 
     def reduce_scatter(self, x, op: str = "sum", team=None):
         return coll.reduce_scatter(self.net, x, op, team=team)
@@ -509,5 +521,9 @@ def spmd_ctx(axis, topo=None, **kw) -> ShmemContext:
     return ShmemContext(SpmdNetOps(axis), topo, **kw)
 
 
-def sim_ctx(n_pes: int, topo=None, **kw) -> ShmemContext:
-    return ShmemContext(SimNetOps(n_pes), topo, **kw)
+def sim_ctx(n_pes: int, topo=None, noc: bool = False, **kw) -> ShmemContext:
+    """noc=True simulates the NoC's link contention: patterns execute as
+    link-disjoint waves (netops.NocSimNetOps) — bit-identical results,
+    congestion-scaled wall time."""
+    net = NocSimNetOps(n_pes, topo=topo) if noc else SimNetOps(n_pes)
+    return ShmemContext(net, topo, **kw)

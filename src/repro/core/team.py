@@ -164,6 +164,15 @@ class TeamTopology:
     def hops(self, a: int, b: int) -> float:
         return self.world.hops(self.team.members[a], self.team.members[b])
 
+    def route(self, a: int, b: int) -> tuple[tuple[int, int], ...]:
+        """The WORLD route between the members team ranks a/b name — link
+        endpoints are world PEs, so an un-lifted team schedule's link
+        loads equal the lifted schedule's by construction."""
+        return self.world.route(self.team.members[a], self.team.members[b])
+
+    def link_weight(self, u: int, v: int) -> float:
+        return self.world.link_weight(u, v)
+
 
 def make_team(members: Sequence[int], world_n: int) -> Team:
     """Intern (and validate) a team from an explicit world-PE list."""

@@ -44,6 +44,18 @@ def main(argv=None):
                     help="chunked double-buffered collective execution: "
                          "an int, or 'auto' for the cost-model pick "
                          "(DESIGN §10)")
+    ap.add_argument("--embedding", default="off",
+                    choices=["off", "auto", "snake"],
+                    help="mesh-embedded ring collectives over the data "
+                         "mesh (DESIGN §12): 'snake' runs rings in snake "
+                         "coordinates, 'auto' prices embeddings against "
+                         "the logical ring and runs the winner")
+    ap.add_argument("--topo", default=None,
+                    help="physical layout of the DATA axis as RxC "
+                         "(non-torus 2D mesh, e.g. 4x4); gives the cost "
+                         "model (--allreduce-algo auto, --embedding) real "
+                         "hop/contention costs. Without it, --embedding "
+                         "falls back to a near-square guess")
     ap.add_argument("--remat", default=None,
                     choices=[None, "none", "full", "selective"],
                     help="override the config remat policy (§Perf P5)")
@@ -80,10 +92,43 @@ def main(argv=None):
         chunks = args.pipeline_chunks
         if chunks is not None and chunks != "auto":
             chunks = int(chunks)
+        embedding = None if args.embedding == "off" else args.embedding
+        topo = None
+        if args.topo:
+            # the operator states the data axis's physical layout — use it
+            # for ALL topology-aware selection (hier, embeddings, pricing)
+            from ..core.topology import MeshTopology
+            shape = tuple(int(p) for p in args.topo.lower().split("x"))
+            if int(np.prod(shape)) != args.data:
+                raise SystemExit(f"--topo {args.topo} covers "
+                                 f"{int(np.prod(shape))} PEs but the data "
+                                 f"axis has {args.data}")
+            topo = MeshTopology(shape, torus=(False,) * len(shape))
+        elif embedding is not None and not args.pod:
+            # mesh-embedded rings need a physical layout to embed into:
+            # fall back to a near-square non-torus guess for the DATA
+            # axis (the Epiphany-style NoC the cost model prices).  With
+            # a pod axis the Comm topo would also price pod-axis
+            # collectives against this data-axis layout — skip rather
+            # than feed the selector a mesh that describes another axis.
+            from ..core.topology import MeshTopology
+            d, r = args.data, int(args.data ** 0.5)
+            while r > 1 and d % r:
+                r -= 1
+            shape = (r, d // r) if r > 1 else (d,)
+            topo = MeshTopology(shape, torus=(False,) * len(shape))
+            print(f"[train] --embedding without --topo: assuming data-axis "
+                  f"layout {'x'.join(map(str, shape))} (pass --topo to "
+                  f"state the real one)")
+        elif embedding is not None:
+            print("[train] --embedding ignored: with --pod, pass --topo "
+                  "to state the data-axis layout explicitly")
+            embedding = None
         init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh)
         wrap, _, (oshapes, ospecs), ocfg = build.make_train_step(
             cfg, mesh, args.comm, allreduce_algo=args.allreduce_algo,
-            grad_rs=grad_rs, pipeline_chunks=chunks)
+            grad_rs=grad_rs, pipeline_chunks=chunks,
+            topo=topo, embedding=embedding)
         ocfg = dataclasses.replace(ocfg, lr=args.lr)
 
         batch0 = pipe.batch(0)

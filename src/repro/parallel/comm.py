@@ -74,14 +74,22 @@ class Comm:
                        shmem allreduces (int, "auto" = cost-model pick,
                        None = monolithic; bit-identical either way,
                        DESIGN.md §10)
+      embedding      : mesh-embedded ring collectives (DESIGN.md §12):
+                       None = logical rings; "auto" prices snake/greedy
+                       embeddings against the identity and runs the
+                       winner; "snake" forces the topology's snake order.
+                       Requires `topo`; rank remapping keeps every ring
+                       hop a physical mesh hop and the hot link at load 1
+                       where the mesh admits a Hamiltonian cycle
     """
 
     def __init__(self, axes: AxisSpec, backend: str = "shmem",
                  allreduce_algo: str = "paper", grad_rs: bool = False,
                  topo: MeshTopology | None = None, link=None,
-                 pipeline_chunks=None):
+                 pipeline_chunks=None, embedding=None):
         assert backend in ("shmem", "xla")
-        assert allreduce_algo in ("paper", "auto", "rd", "ring", "hier")
+        assert allreduce_algo in ("paper", "auto", "rd", "ring", "ring_emb",
+                                  "hier")
         self.axes = axes
         self.backend = backend
         self.allreduce_algo = allreduce_algo
@@ -89,11 +97,27 @@ class Comm:
         self.topo = topo
         self.link = link
         self.pipeline_chunks = pipeline_chunks
+        self.embedding = embedding
         self._partitions: dict[int, team_mod.TeamPartition | None] = {}
 
     # -- helpers -------------------------------------------------------------
     def _net(self, axis) -> SpmdNetOps:
         return SpmdNetOps(axis)
+
+    def _topo_for(self, net) -> MeshTopology | None:
+        """The configured topology, only when it actually describes this
+        axis's PE space — pricing a pod/tp axis against the data-axis
+        mesh would feed the selector meaningless hop/load costs."""
+        if self.topo is not None and self.topo.n_pes == net.n_pes:
+            return self.topo
+        return None
+
+    def _embedding_for(self, net):
+        """The embedding knob is defined relative to `topo`; on axes the
+        topology does not describe it is dropped (an explicit rank order
+        would otherwise fail permutation validation against the wrong
+        PE count)."""
+        return self.embedding if self._topo_for(net) is not None else None
 
     def _partition_for(self, net) -> team_mod.TeamPartition | None:
         """The row-team partition of `topo` the hierarchical allreduce
@@ -144,16 +168,20 @@ class Comm:
             algo = "auto"       # no usable partition: flat candidates only
         return jax.tree.map(
             lambda v: coll.allreduce(net, v, op, algorithm=algo,
-                                     topo=self.topo, link=self.link,
+                                     topo=self._topo_for(net), link=self.link,
                                      pipeline_chunks=self.pipeline_chunks,
-                                     partition=part), x)
+                                     partition=part,
+                                     embedding=self._embedding_for(net)), x)
 
     def allgather(self, x, axis, *, concat_axis: int = 0):
         if axis is None or axis == ():
             return x
         if self.backend == "xla":
             return lax.all_gather(x, axis, axis=concat_axis, tiled=True)
-        return coll.fcollect(self._net(axis), x, axis=concat_axis)
+        net = self._net(axis)
+        return coll.fcollect(net, x, axis=concat_axis,
+                             topo=self._topo_for(net), link=self.link,
+                             embedding=self._embedding_for(net))
 
     def reduce_scatter(self, x, axis, *, op: str = "sum", scatter_axis: int = 0):
         if self.backend == "xla":
@@ -213,8 +241,11 @@ class Comm:
             # ring allgather — moves ~2x buffer instead of log2(N)x
             def one(g):
                 net = self._net(dax)
-                own, info = coll.reduce_scatter(net, g, "sum")
-                out = coll.allgather_unpad(net, own, info)
+                emb_team = coll.embedding_team(self._embedding_for(net),
+                                               self._topo_for(net),
+                                               net.n_pes, self.link)
+                own, info = coll.reduce_scatter(net, g, "sum", team=emb_team)
+                out = coll.allgather_unpad(net, own, info, team=emb_team)
                 if axes.pod is not None:
                     out = self.allreduce(out, axes.pod)
                 return out
@@ -255,33 +286,44 @@ class Comm:
             out = [lax.psum(b, axes.grad_axes()) for b in buckets]
         else:
             net = self._net(axes.data)
+            topo = self._topo_for(net)
             part = self._partition_for(net) \
                 if self.allreduce_algo in ("auto", "hier") else None
+            # flat buckets ride the ring in embedded coordinates when the
+            # embedding knob is on (a covering team: same result, every
+            # hop one physical hop — DESIGN.md §12)
+            emb = self._embedding_for(net)
+            emb_team = coll.embedding_team(emb, topo, net.n_pes, self.link)
 
             def _hier_wins(b) -> bool:
                 if part is None:
                     return False
                 if self.allreduce_algo == "hier":
                     return True
-                # price hier against the RING schedule only — that is the
-                # path flat buckets actually execute below (not rd)
+                # price hier against the ring schedule the flat path
+                # actually executes below — EMBEDDED when the knob is on,
+                # logical otherwise (never rd)
                 nbytes = float(b.size * b.dtype.itemsize)
                 t_hier = coll.allreduce_hier_schedule(
-                    part, nbytes, topo=self.topo,
-                    link=self.link).time(self.topo, self.link)
-                t_ring = coll.allreduce_schedule(
-                    net.n_pes, nbytes, "ring").time(self.topo, self.link)
-                return t_hier < t_ring
-
+                    part, nbytes, topo=topo, link=self.link,
+                    embedding=emb).time(topo, self.link)
+                t_flat = coll.allreduce_schedule(
+                    net.n_pes, nbytes,
+                    "ring_emb" if emb_team is not None else "ring",
+                    embedding=None if emb_team is None
+                    else emb_team.members).time(topo, self.link)
+                return t_hier < t_flat
             hier = [_hier_wins(b) for b in buckets]
             # phase 1: issue every flat bucket's reduce-scatter (pipeline
             # fill); hierarchical buckets run their own RS->cross->AG
-            owned = [None if h else coll.reduce_scatter(net, b, "sum")
+            owned = [None if h
+                     else coll.reduce_scatter(net, b, "sum", team=emb_team)
                      for b, h in zip(buckets, hier)]
             # phase 2: allgathers drain while later reduce-scatters fly
             out = [coll.allreduce_hier(net, b, "sum", partition=part,
-                                       topo=self.topo, link=self.link)
-                   if h else coll.allgather_unpad(net, *own)
+                                       topo=topo, link=self.link,
+                                       embedding=emb)
+                   if h else coll.allgather_unpad(net, *own, team=emb_team)
                    for b, h, own in zip(buckets, hier, owned)]
             if axes.pod is not None:
                 out = [self.allreduce(b, axes.pod) for b in out]

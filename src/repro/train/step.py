@@ -92,7 +92,7 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
                      adamw: opt.AdamWConfig | None = None,
                      fuse_grads: bool = True, allreduce_algo: str = "paper",
                      grad_rs: bool | str = False, pipeline_chunks=None,
-                     topo=None, link=None):
+                     topo=None, link=None, embedding=None):
     """Returns step(params, opt_state, batch) -> (loss, params, opt_state)
     to be wrapped in shard_map by the launcher.
 
@@ -103,7 +103,9 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
     "auto" / None) to every shmem allreduce in the step.  topo/link give
     the cost model the mesh to price against; with a 2D+ topo and
     allreduce_algo="auto", bucket syncs may take the hierarchical
-    two-level allreduce over the mesh's row teams (DESIGN.md §11)."""
+    two-level allreduce over the mesh's row teams (DESIGN.md §11).
+    embedding ("auto"/"snake"/an order, with topo) runs ring syncs in
+    mesh-embedded coordinates — every ring hop one physical hop (§12)."""
     adamw = adamw or opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
 
     def step(params, opt_state, batch):
@@ -119,7 +121,7 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
             rs = synced_bytes >= GRAD_RS_AUTO_BYTES
         comm = Comm(axes, backend, allreduce_algo=allreduce_algo,
                     grad_rs=rs, pipeline_chunks=pipeline_chunks,
-                    topo=topo, link=link)
+                    topo=topo, link=link, embedding=embedding)
         # clamp grad-accumulation to the local batch (a bigger mesh shrinks
         # B_local; slicing zero-size microbatches would silently no-op)
         b_local = jax.tree.leaves(batch)[0].shape[0]

@@ -1,49 +1,136 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (paper Figs. 3-9 + kernel layer),
-then the roofline table if dry-run/probe artifacts exist.
+then the schedule/congestion/substrate/tuner reports and the roofline
+table if dry-run/probe artifacts exist.
+
+``--json OUT`` additionally writes every bench's rows as one
+machine-readable ``BENCH_*.json`` document (standardized
+size/measured/predicted/picked fields parsed from each row — the CI
+perf-trajectory artifact); ``--only a,b`` restricts which benches run.
 
   PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run --only patterns,tuner \\
+      --json bench-reports/BENCH_smoke.json
 """
+import argparse
+import json
 import pathlib
+import re
 import sys
+import time
 
 sys.path.insert(0, "src")
 
+# Best-effort extractors for the standardized JSON rows.  Every bench
+# module prints (name, us, derived) triples; sizes live in ``_<N>B`` name
+# suffixes, predictions in ``fit=``/``noc=``/``pred=`` derived fields,
+# picks in ``picked=``/``picks=`` fields or auto_pick rows.
+_SIZE_RE = re.compile(r"_(\d+)B(?:_|$)")
+_PRED_RE = re.compile(r"(?:fit|noc|pred(?:icted)?)=([\d.eE+-]+)us")
+_PICK_RE = re.compile(r"pick(?:ed|s)?=([\w/|.-]+)")
 
-def main() -> None:
+
+def _std_row(bench: str, name: str, us, derived: str) -> dict:
+    size = _SIZE_RE.search(name)
+    pred = _PRED_RE.search(derived)
+    pick = _PICK_RE.search(derived)
+    if pick is None and "pick" in name:
+        m = re.match(r"([a-z_]\w*)", derived)
+        pick = m
+    return {
+        "bench": bench,
+        "name": name,
+        "measured_us": float(us),
+        "derived": derived,
+        "size_bytes": int(size.group(1)) if size else None,
+        "predicted_us": float(pred.group(1)) if pred else None,
+        "picked": pick.group(1) if pick else None,
+    }
+
+
+def _run_paper():
     from . import paper_benches
-
     print("name,us_per_call,derived")
     for bench in paper_benches.ALL:
         bench()
+    return paper_benches
 
-    print("\n== compiled CommPattern schedules: predicted vs measured ==")
-    try:
-        from . import bench_patterns
-        bench_patterns.main()
-    except Exception as e:  # keep the rest of the harness running
-        print(f"pattern bench skipped: {e}")
 
-    print("\n== congestion model: predicted vs measured under contention ==")
-    try:
-        from . import bench_congestion
-        bench_congestion.main()
-    except Exception as e:  # keep the rest of the harness running
-        print(f"congestion bench skipped: {e}")
+def _module_runner(modname: str, header: str):
+    def run():
+        print(f"\n== {header} ==")
+        import importlib
+        mod = importlib.import_module(f".{modname}", __package__)
+        mod.main()
+        return mod
+    return run
 
-    print("\n== substrate A/B (ARL shmem vs XLA 'eLib') ==")
-    try:
-        from . import bench_substrate
-        bench_substrate.main()
-    except Exception as e:  # subprocess-heavy; non-fatal
-        print(f"substrate bench skipped: {e}")
 
-    probe_dir = pathlib.Path("experiments/roofline")
-    if probe_dir.exists() and any(probe_dir.glob("*.json")):
-        print("\n== roofline (from dry-run probes) ==")
-        from . import roofline
-        roofline.render_table()
+# Ordered registry: (key, fatal?, runner).  Non-fatal benches report and
+# continue (subprocess-heavy or optional ones).
+BENCHES = [
+    ("paper", True, _run_paper),
+    ("patterns", False, _module_runner(
+        "bench_patterns",
+        "compiled CommPattern schedules: predicted vs measured")),
+    ("congestion", False, _module_runner(
+        "bench_congestion",
+        "congestion model: predicted vs measured under contention")),
+    ("tuner", False, _module_runner(
+        "bench_tuner",
+        "measured-performance autotuner: sweep + tuned-selector checks")),
+    ("substrate", False, _module_runner(
+        "bench_substrate", "substrate A/B (ARL shmem vs XLA 'eLib')")),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="",
+                    help="write all rows as one machine-readable "
+                         "BENCH_*.json (per-row size/measured/predicted/"
+                         "picked fields)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench keys to run "
+                         f"({','.join(k for k, _, _ in BENCHES)},"
+                         "roofline); default: all")
+    args = ap.parse_args(argv)
+    only = {k.strip() for k in args.only.split(",") if k.strip()}
+    unknown = only - {k for k, _, _ in BENCHES} - {"roofline"}
+    if unknown:
+        raise SystemExit(f"unknown bench keys: {sorted(unknown)}")
+
+    rows: list[dict] = []
+    for key, fatal, runner in BENCHES:
+        if only and key not in only:
+            continue
+        try:
+            mod = runner()
+        except Exception as e:
+            if fatal:
+                raise
+            print(f"{key} bench skipped: {e}")
+            continue
+        for name, us, derived in getattr(mod, "ROWS", []):
+            rows.append(_std_row(key, name, us, str(derived)))
+
+    if not only or "roofline" in only:
+        probe_dir = pathlib.Path("experiments/roofline")
+        if probe_dir.exists() and any(probe_dir.glob("*.json")):
+            print("\n== roofline (from dry-run probes) ==")
+            from . import roofline
+            roofline.render_table()
+
+    if args.json:
+        out = pathlib.Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        doc = {"schema": 1,
+               "generated_unix": time.time(),
+               "benches": sorted({r["bench"] for r in rows}),
+               "rows": rows}
+        out.write_text(json.dumps(doc, indent=1))
+        print(f"\n[run] wrote {len(rows)} rows to {out}")
 
 
 if __name__ == "__main__":

@@ -34,9 +34,25 @@ class ABFit:
 
 
 def fit(sizes_bytes, times_s) -> ABFit:
-    """Least-squares fit of T = alpha + beta*L with parameter std devs."""
+    """Least-squares fit of T = alpha + beta*L with parameter std devs.
+
+    Needs at least two samples at two DISTINCT sizes — a single point or
+    a constant size grid cannot separate alpha from beta (the normal
+    matrix is singular) and raises rather than returning garbage."""
     x = np.asarray(sizes_bytes, dtype=np.float64)
     y = np.asarray(times_s, dtype=np.float64)
+    if x.ndim != 1 or x.shape != y.shape:
+        raise ValueError(
+            f"fit needs matching 1-D size/time samples, got shapes "
+            f"{x.shape} and {y.shape}")
+    if len(x) < 2:
+        raise ValueError(
+            f"fit needs >= 2 (size, time) samples to recover (alpha, "
+            f"beta), got {len(x)}")
+    if np.unique(x).size < 2:
+        raise ValueError(
+            f"fit needs >= 2 distinct message sizes (all samples are at "
+            f"{x[0]:g} B — alpha and beta are not separable)")
     A = np.stack([np.ones_like(x), x], axis=1)
     coef, *_ = np.linalg.lstsq(A, y, rcond=None)
     resid = y - A @ coef
@@ -135,12 +151,28 @@ def fit_contention(link_loads, times_s) -> float:
     """Recover the LinkModel `contention` factor from measurements of the
     SAME transfer at different hot-link multiplicities: least-squares fit
     of  t(load) = t(1) * (1 + gamma * (load - 1))  with t(1) taken from
-    the load==1 samples.  Returns gamma clipped to [0, 1]."""
+    the load==1 samples.  Returns gamma clipped to [0, 1].
+
+    Needs at least one load<=1 baseline sample AND at least one load>1
+    sample — with no loaded point gamma is unidentifiable (the
+    degenerate grid the guards below reject)."""
     loads = np.asarray(link_loads, dtype=np.float64)
     times = np.asarray(times_s, dtype=np.float64)
+    if loads.ndim != 1 or loads.shape != times.shape:
+        raise ValueError(
+            f"fit_contention needs matching 1-D load/time samples, got "
+            f"shapes {loads.shape} and {times.shape}")
+    if len(loads) < 2:
+        raise ValueError(
+            f"fit_contention needs >= 2 (load, time) samples, got "
+            f"{len(loads)}")
     base = times[loads <= 1.0]
     if len(base) == 0:
         raise ValueError("fit_contention needs at least one load==1 sample")
+    if not (loads > 1.0).any():
+        raise ValueError(
+            "fit_contention needs at least one load>1 sample — an "
+            "all-unit load grid cannot identify the contention factor")
     t1 = float(base.mean())
     x = loads - 1.0
     denom = float(x @ x)
@@ -151,10 +183,22 @@ def fit_contention(link_loads, times_s) -> float:
 
 
 def choose_chunks(stages: list[tuple],
-                  link: LinkModel = ICI_V5E, max_chunks: int = 32) -> int:
+                  link: LinkModel = ICI_V5E, max_chunks: int = 32,
+                  tuner=None, key: tuple | None = None) -> int:
     """Pick the chunk count (power of two, 1 = monolithic) minimizing the
     modeled pipelined time of a schedule's (bytes, hops[, max_link_load])
-    stage costs."""
+    stage costs.
+
+    With a `tuner` (a ``repro.core.tuner.TunedSelector``) and a `key`
+    ``(collective, algorithm, n, nbytes, topo)``, the MEASURED best chunk
+    count for that point is consulted first (DESIGN.md §13 precedence);
+    the analytic pipeline model is the fallback for unmeasured points."""
+    if tuner is not None and key is not None:
+        collective, algorithm, n, nbytes, topo = key
+        c = tuner.chunks(collective, algorithm, n, nbytes, topo,
+                         max_chunks=max_chunks)
+        if c is not None:
+            return max(1, min(int(c), max_chunks))
     candidates = [1 << k for k in range(max(1, max_chunks).bit_length())
                   if (1 << k) <= max_chunks]
     return min(candidates,

@@ -136,12 +136,12 @@ def embedding_team(embedding, topo, n: int, link=None):
     return None if order is None else _embedding_team(order, n)
 
 
-def _resolve_embedding(embedding, topo, n: int, link=None):
+def _resolve_embedding(embedding, topo, n: int, link=None, tuner=None):
     """The embedding knob: None -> off; "snake" -> the topology's snake
     order; "auto" -> cost-model pick (snake vs a greedy remap vs identity,
-    `choose_embedding`); an explicit order passes through validated.
-    Returns a world rank order, or None when the identity (logical ring)
-    is the embedding."""
+    `choose_embedding` — measured-first when a `tuner` is threaded); an
+    explicit order passes through validated.  Returns a world rank order,
+    or None when the identity (logical ring) is the embedding."""
     if embedding is None:
         return None
     if isinstance(embedding, str):
@@ -154,7 +154,7 @@ def _resolve_embedding(embedding, topo, n: int, link=None):
         if topo is None or getattr(topo, "n_pes", None) != n:
             return None
         if embedding == "auto":
-            return choose_embedding(n, topo, link)
+            return choose_embedding(n, topo, link, tuner=tuner)
         order = topo.snake_order()
         return None if order == tuple(range(n)) else order
     order = tuple(int(p) for p in embedding)
@@ -175,14 +175,26 @@ _EMBED_CACHE: dict = {}
 _EMBED_CACHE_MAX = 256
 
 
-def choose_embedding(n: int, topo, link=None):
+def choose_embedding(n: int, topo, link=None, tuner=None):
     """Cost-model embedding selection: price the ring allreduce schedule
     under the identity, the snake order, and (small meshes) a greedy
     `optimize_embedding` remap seeded from the snake; return the winning
     order, or None when the logical ring already prices best.  Cached per
-    (topo, n, link)."""
+    (topo, n, link).
+
+    A `tuner` (``repro.core.tuner.TunedSelector``) is consulted FIRST:
+    when the tuning DB holds measurements near the reference payload for
+    this topology, the measured-best embedding (identity / snake / an
+    explicit order) overrides the analytic pricing (DESIGN.md §13)."""
     if topo is None or getattr(topo, "n_pes", None) != n or n <= 2:
         return None
+    if tuner is not None:
+        pick = tuner.embedding(n, EMBED_REF_BYTES, topo)
+        if pick is not None:
+            if pick == "identity":
+                return None
+            order = topo.snake_order() if pick == "snake" else tuple(pick)
+            return None if order == tuple(range(n)) else order
 
     def _build():
         def _sched(order):
@@ -550,7 +562,7 @@ def allreduce_hier(net: NetOps, x, op: str = "sum",
 
 def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
                      collective: str = "allreduce", team=None,
-                     partition=None, embedding=None) -> str:
+                     partition=None, embedding=None, tuner=None) -> str:
     """Cost-model algorithm selection: price each candidate schedule with
     the congestion-aware alpha-beta model on `topo`/`link` and take the
     cheapest.
@@ -568,7 +580,12 @@ def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
     keeping the bulk bytes on intra-team links beats the flat ring.  With
     `embedding` enabled ("auto"/"snake"/an order), the mesh-embedded ring
     "ring_emb" joins too (DESIGN.md §12) — one physical hop per stage,
-    hot-link load 1 where the mesh admits a Hamiltonian cycle."""
+    hot-link load 1 where the mesh admits a Hamiltonian cycle.
+
+    A `tuner` (``repro.core.tuner.TunedSelector``) is consulted FIRST:
+    the measured-best algorithm among the legal candidates overrides the
+    analytic pricing; unmeasured points fall through to the model
+    (DESIGN.md §13 precedence)."""
     if team is not None:
         n = team.size
     if n <= 1:
@@ -581,7 +598,7 @@ def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
             reordered = _team_embed_view(team, topo, embedding, link)
             emb_view = None if reordered is team else reordered
     else:
-        emb = _resolve_embedding(embedding, topo, n, link)
+        emb = _resolve_embedding(embedding, topo, n, link, tuner=tuner)
 
     def _priced(a: str) -> float:
         if a == "hier":
@@ -604,6 +621,13 @@ def choose_algorithm(n: int, nbytes: float, topo=None, link=None,
             and partition.covers_world and partition.n_teams > 1
             and partition.size > 1):
         candidates.append("hier")
+    if tuner is not None and team is None:
+        # measured-first, restricted to the legal candidate set so knob
+        # changes degrade to the best measured candidate that still runs
+        pick = tuner.algorithm(collective, n, nbytes, topo,
+                               candidates=candidates)
+        if pick is not None:
+            return pick
     return min(candidates, key=_priced)
 
 
@@ -615,7 +639,8 @@ PIPELINE_MAX_CHUNKS = 16
 def choose_schedule(n: int, nbytes: float, topo=None, link=None,
                     collective: str = "allreduce",
                     max_chunks: int = PIPELINE_MAX_CHUNKS,
-                    partition=None, embedding=None) -> tuple[str, int]:
+                    partition=None, embedding=None,
+                    tuner=None) -> tuple[str, int]:
     """choose_algorithm extended over the pipelining axis: price every
     candidate (algorithm, chunk-count) pair with the alpha-beta model —
     `abmodel.modeled_pipelined_time` for chunked, eq. 1 for monolithic —
@@ -634,10 +659,21 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
         return "ring", 1
     link = link if link is not None else abmodel.ICI_V5E
     build = _SELECTABLE[collective]
-    emb = _resolve_embedding(embedding, topo, n, link)
+    emb = _resolve_embedding(embedding, topo, n, link, tuner=tuner)
     best, best_t = ("ring", 1), math.inf
     algos = ["ring"] + (["rd"] if _is_pow2(n) else []) \
         + (["ring_emb"] if emb is not None else [])
+    hier_ok = (partition is not None and collective == "allreduce"
+               and partition.covers_world and partition.n_teams > 1
+               and partition.size > 1)
+    if tuner is not None:
+        # measured-best (algorithm, chunk-count) pair for this point
+        # (DESIGN.md §13); the analytic pricing below is the fallback
+        pick = tuner.schedule(collective, n, nbytes, topo,
+                              algos=algos + (["hier"] if hier_ok else []),
+                              max_chunks=max_chunks)
+        if pick is not None:
+            return ("hier", 1) if pick[0] == "hier" else pick
     for algo in algos:
         cost = build(n, nbytes, algorithm=algo,
                      embedding=emb if algo == "ring_emb" else None
@@ -646,9 +682,7 @@ def choose_schedule(n: int, nbytes: float, topo=None, link=None,
         t = abmodel.modeled_pipelined_time(cost, c, link)
         if t < best_t:
             best, best_t = (algo, c), t
-    if (partition is not None and collective == "allreduce"
-            and partition.covers_world and partition.n_teams > 1
-            and partition.size > 1):
+    if hier_ok:
         t = allreduce_hier_schedule(
             partition, nbytes, topo=topo, link=link,
             embedding=embedding).time(topo, link)
@@ -720,16 +754,19 @@ def _software_pipeline(pieces, n_stages: int, stage_fn):
 
 
 def _resolve_chunks(pipeline_chunks, schedule: Schedule, topo=None,
-                    link=None) -> int:
+                    link=None, tuner=None, key: tuple | None = None) -> int:
     """None/1 -> monolithic; "auto" -> abmodel.choose_chunks on the
-    executing schedule's own cost descriptor; an int passes through."""
+    executing schedule's own cost descriptor (measured-first when a
+    `tuner` and a ``(collective, algorithm, n, nbytes, topo)`` key are
+    threaded); an int passes through."""
     if pipeline_chunks in (None, 0, 1):
         return 1
     if pipeline_chunks == "auto":
         from . import abmodel
         link = link if link is not None else abmodel.ICI_V5E
         return abmodel.choose_chunks(schedule.cost(topo), link,
-                                     max_chunks=PIPELINE_MAX_CHUNKS)
+                                     max_chunks=PIPELINE_MAX_CHUNKS,
+                                     tuner=tuner, key=key)
     return int(pipeline_chunks)
 
 
@@ -771,7 +808,7 @@ def _interleave_blocks(outs, bounds, n: int, ax: int):
 # ---------------------------------------------------------------------------
 
 def barrier(net: NetOps, token=None, team=None, algorithm: str | None = None,
-            topo=None, link=None):
+            topo=None, link=None, profile=None):
     """Software barrier: dissemination (default — round k exchanges a
     token with rank (i + 2^k) of the group) or "tree" (binomial gather to
     rank 0, then binomial broadcast — sparser rounds, the low-congestion
@@ -784,6 +821,9 @@ def barrier(net: NetOps, token=None, team=None, algorithm: str | None = None,
     algo = algorithm or "dissem"
     if algo == "auto":
         algo = choose_barrier(n, topo, link, team=team)
+    if profile is not None:
+        profile.note(algorithm=algo, schedule=barrier_schedule(n, algo),
+                     topo=topo, link=link, collective="barrier", n_pes=n)
     tok = jnp.zeros((), jnp.int32) if token is None else token
     if isinstance(net, SimNetOps):
         tok = jnp.broadcast_to(tok, (net.n_pes,) + tok.shape[1:]) \
@@ -807,15 +847,21 @@ def barrier(net: NetOps, token=None, team=None, algorithm: str | None = None,
 # ---------------------------------------------------------------------------
 
 def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
-              topo=None, link=None, team=None):
+              topo=None, link=None, team=None, profile=None, tuner=None):
     """Farthest-first binomial broadcast; with `team`, `root` is a TEAM
     rank and only members take the root's value (non-members keep x)."""
     _, n, lift, _ = _team_view(net, team)
     if n == 1:
         return x
-    sched = broadcast_schedule(n, _payload_bytes(net, x), root)
-    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link) \
+    nbytes = _payload_bytes(net, x)
+    sched = broadcast_schedule(n, nbytes, root)
+    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link, tuner,
+                             ("broadcast", "binomial_ff", n, nbytes, topo)) \
         if team is None else 1
+    if profile is not None:
+        profile.note(algorithm="binomial_ff", chunks=chunks, schedule=sched,
+                     topo=topo, link=link, collective="broadcast",
+                     nbytes=nbytes, n_pes=n)
     if chunks > 1:
         pieces, _, restore = _flat_pieces(net, x, chunks)
 
@@ -839,7 +885,7 @@ def broadcast(net: NetOps, x, root: int = 0, pipeline_chunks=None,
 
 def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
              pipeline_chunks=None, topo=None, link=None, team=None,
-             embedding=None):
+             embedding=None, profile=None, tuner=None):
     """Concatenate equal-size blocks from all group members along `axis`.
 
     Recursive doubling (log2 N stages, doubling message size) when the
@@ -856,7 +902,7 @@ def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
     _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
-    emb = _resolve_embedding(embedding, topo, n, link) \
+    emb = _resolve_embedding(embedding, topo, n, link, tuner=tuner) \
         if team is None else None
     nbytes = _payload_bytes(net, x)
     if algorithm == "auto":
@@ -864,7 +910,8 @@ def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
         # team view); the flat path passes the resolved order
         algo = choose_algorithm(n, nbytes, topo, link, collective="fcollect",
                                 team=team,
-                                embedding=emb if team is None else embedding)
+                                embedding=emb if team is None else embedding,
+                                tuner=tuner)
     else:
         algo = algorithm or ("rd" if _is_pow2(n) else "ring")
         if algorithm is None and algo == "ring" and (
@@ -873,6 +920,9 @@ def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
             algo = "ring_emb"       # default policy + enabled embedding
     if algo == "ring_emb":
         if team is not None:        # embedding in team coordinates (§12)
+            if profile is not None:
+                profile.note(algorithm="ring_emb", collective="fcollect",
+                             nbytes=nbytes, n_pes=n)
             return _collect_ring_team_embedded(net, x, axis, team, topo,
                                                embedding, link)
         if emb is None:
@@ -881,11 +931,16 @@ def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
             emb = _resolve_embedding("snake", topo, n, link)
         if emb is None:
             algo = "ring"                     # no usable embedding: logical
+    sched = fcollect_schedule(n, nbytes, algo,
+                              embedding=emb if algo == "ring_emb" else None)
     chunks = 1 if team is not None else _resolve_chunks(
-        pipeline_chunks,
-        fcollect_schedule(n, nbytes, algo,
-                          embedding=emb if algo == "ring_emb" else None),
-        topo, link)
+        pipeline_chunks, sched, topo, link, tuner,
+        ("fcollect", algo, n, nbytes, topo))
+    if profile is not None:
+        profile.note(algorithm=algo, chunks=chunks, schedule=sched,
+                     topo=topo, link=link, collective="fcollect",
+                     nbytes=nbytes, n_pes=n,
+                     embedding=emb if algo == "ring_emb" else None)
     if algo == "ring_emb":
         return _collect_ring_embedded(net, x, axis, emb, n_chunks=chunks)
     if algo == "rd":
@@ -894,22 +949,31 @@ def fcollect(net: NetOps, x, axis: int = 0, algorithm: str | None = None,
 
 
 def collect(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
-            topo=None, link=None, team=None, embedding=None):
+            topo=None, link=None, team=None, embedding=None, profile=None,
+            tuner=None):
     """The paper's linear-scaling ring collect (mesh-embedded when
     `embedding` is enabled — bit-identical output, near-neighbor flows)."""
     _, n, _, _ = _team_view(net, team)
     if n == 1:
         return x
+    nbytes = _payload_bytes(net, x)
     if team is not None and embedding is not None:
+        if profile is not None:
+            profile.note(algorithm="ring_emb", collective="collect",
+                         nbytes=nbytes, n_pes=n)
         return _collect_ring_team_embedded(net, x, axis, team, topo,
                                            embedding, link)
-    emb = _resolve_embedding(embedding, topo, n, link) \
+    emb = _resolve_embedding(embedding, topo, n, link, tuner=tuner) \
         if team is None else None
+    algo = "ring_emb" if emb is not None else "ring"
+    sched = fcollect_schedule(n, nbytes, algo, embedding=emb)
     chunks = 1 if team is not None else _resolve_chunks(
-        pipeline_chunks,
-        fcollect_schedule(n, _payload_bytes(net, x),
-                          "ring_emb" if emb is not None else "ring",
-                          embedding=emb), topo, link)
+        pipeline_chunks, sched, topo, link, tuner,
+        ("collect", algo, n, nbytes, topo))
+    if profile is not None:
+        profile.note(algorithm=algo, chunks=chunks, schedule=sched,
+                     topo=topo, link=link, collective="collect",
+                     nbytes=nbytes, n_pes=n, embedding=emb)
     if emb is not None:
         return _collect_ring_embedded(net, x, axis, emb, n_chunks=chunks)
     return _collect_ring(net, x, axis, n_chunks=chunks, team=team)
@@ -1108,7 +1172,7 @@ RING_BYTES_THRESHOLD = 1 << 20   # 1 MiB: the old hand-tuned switch point,
 def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
               algorithm: str | None = None, topo=None, link=None,
               pipeline_chunks=None, team=None, partition=None,
-              embedding=None):
+              embedding=None, profile=None, tuner=None):
     """shmem_TYPE_OP_to_all.
 
     Algorithm selection generalizes the paper's PE-count switch (§3.6:
@@ -1150,13 +1214,16 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
             return x
         if algorithm == "auto":
             algo = choose_algorithm(n, nbytes, topo, link, team=team,
-                                    embedding=embedding)
+                                    embedding=embedding, tuner=tuner)
         elif algorithm in (None, "paper"):
             algo = "rd" if _is_pow2(n) else "ring"
             if algorithm is None and algo == "ring" and embedding is not None:
                 algo = "ring_emb"
         else:
             algo = algorithm
+        if profile is not None:
+            profile.note(algorithm=algo, collective="allreduce",
+                         nbytes=nbytes, n_pes=n)
         if algo == "ring_emb":
             # the embedding in team coordinates: the reordered team IS the
             # embedded ring (same members, snake-adjacent rank order) —
@@ -1170,10 +1237,13 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
     if n == 1:
         return x
     if algorithm == "hier":
+        if profile is not None:
+            profile.note(algorithm="hier", collective="allreduce",
+                         nbytes=nbytes, n_pes=n)
         return allreduce_hier(net, x, op, combine=combine,
                               partition=partition, topo=topo, link=link,
                               embedding=embedding)
-    emb = _resolve_embedding(embedding, topo, n, link)
+    emb = _resolve_embedding(embedding, topo, n, link, tuner=tuner)
     if algorithm == "ring_emb" and emb is None:
         # explicit algorithm= without the knob: default to the snake, and
         # resolve BEFORE chunk selection so choose_chunks prices the
@@ -1181,11 +1251,13 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
         emb = _resolve_embedding("snake", topo, n, link)
     if algorithm == "auto" and pipeline_chunks == "auto":
         algo, chunks = choose_schedule(n, nbytes, topo, link,
-                                       partition=partition, embedding=emb)
+                                       partition=partition, embedding=emb,
+                                       tuner=tuner)
     else:
         if algorithm == "auto":
             algo = choose_algorithm(n, nbytes, topo, link,
-                                    partition=partition, embedding=emb)
+                                    partition=partition, embedding=emb,
+                                    tuner=tuner)
         elif algorithm is None:
             algo = "rd" if _is_pow2(n) else "ring"
             if algo == "ring" and emb is not None:
@@ -1194,7 +1266,16 @@ def allreduce(net: NetOps, x, op: str = "sum", combine: Callable | None = None,
             algo = algorithm
         chunks = 1 if algo == "hier" else _resolve_chunks(
             pipeline_chunks,
-            allreduce_schedule(n, nbytes, algo, embedding=emb), topo, link)
+            allreduce_schedule(n, nbytes, algo, embedding=emb), topo, link,
+            tuner, ("allreduce", algo, n, nbytes, topo))
+    if profile is not None:
+        sched = None if algo == "hier" else allreduce_schedule(
+            n, nbytes, algo,
+            embedding=emb if algo == "ring_emb" else None)
+        profile.note(algorithm=algo, chunks=chunks, schedule=sched,
+                     topo=topo, link=link, collective="allreduce",
+                     nbytes=nbytes, n_pes=n,
+                     embedding=emb if algo == "ring_emb" else None)
     if algo == "hier":
         return allreduce_hier(net, x, op, combine=combine,
                               partition=partition, topo=topo, link=link,
@@ -1317,12 +1398,18 @@ def _allreduce_ring_pipelined(net: NetOps, x, fn, n_chunks: int, team=None):
 
 
 def reduce_scatter(net: NetOps, x, op: str = "sum",
-                   combine: Callable | None = None, team=None):
+                   combine: Callable | None = None, team=None, profile=None):
     """Ring reduce-scatter; returns this PE's owned chunk of the flattened,
     padded array plus the info needed to allgather/unpad it.  With `team`
     the ring runs in team coordinates (a TeamPartition runs every team's
     ring concurrently); chunk ownership is by team rank."""
     fn = combine or OPS[op]
+    if profile is not None:
+        nbytes = _payload_bytes(net, x)
+        profile.note(algorithm="ring",
+                     schedule=reduce_scatter_schedule(net.n_pes, nbytes),
+                     collective="reduce_scatter", nbytes=nbytes,
+                     n_pes=net.n_pes)
     return _reduce_scatter_ring(net, x, fn, team=team)
 
 
@@ -1405,7 +1492,7 @@ _allgather_unpad = allgather_unpad
 # ---------------------------------------------------------------------------
 
 def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
-             topo=None, link=None, team=None):
+             topo=None, link=None, team=None, profile=None, tuner=None):
     """out[src-block] = x_src[my-block]; x's `axis` dim = group size *
     block (group = the world, or `team`'s members in team-rank order).
 
@@ -1428,7 +1515,8 @@ def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
         else (rank + jnp.arange(n)) % n
     r = _take_blocks(net, x, idx, n, axis)
     blk = dim // n
-    sched = alltoall_schedule(n, _payload_bytes(net, x))
+    nbytes = _payload_bytes(net, x)
+    sched = alltoall_schedule(n, nbytes)
     out_idx = (rank[..., None] - jnp.arange(n)) % n if sim \
         else (rank - jnp.arange(n)) % n
 
@@ -1438,6 +1526,10 @@ def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
         return v[tuple(sl)]
 
     if team is not None:
+        if profile is not None:
+            profile.note(algorithm="pairwise", schedule=sched, topo=topo,
+                         link=link, collective="alltoall",
+                         nbytes=nbytes, n_pes=n)
         parts = [static_blk(r, 0)]
         for j, st in enumerate(sched.stages, start=1):
             parts.append(net.ppermute(static_blk(r, j), lift(st.pattern)))
@@ -1445,7 +1537,12 @@ def alltoall(net: NetOps, x, axis: int = 0, pipeline_chunks=None,
         return _mask_out(net, mask,
                          _take_blocks(net, stacked, out_idx, n, axis))
 
-    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link)
+    chunks = _resolve_chunks(pipeline_chunks, sched, topo, link, tuner,
+                             ("alltoall", "pairwise", n, nbytes, topo))
+    if profile is not None:
+        profile.note(algorithm="pairwise", chunks=chunks, schedule=sched,
+                     topo=topo, link=link, collective="alltoall",
+                     nbytes=nbytes, n_pes=n)
     if chunks > 1:
         bounds = _chunk_bounds(blk, chunks)
 

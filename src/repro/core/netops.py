@@ -39,9 +39,22 @@ class NetOps:
     """Protocol: n_pes, my_pe(), ppermute(), with sender-driven semantics."""
 
     n_pes: int
+    # Optional attached repro.core.profile.Profiler (ShmemContext sets it):
+    # ppermute traffic lands in its aggregate counters.  Plain class
+    # attribute, NOT a dataclass field — the default costs subclasses
+    # nothing and the hot path pays one `is None` test when unattached.
+    profile = None
 
     def my_pe(self):
         raise NotImplementedError
+
+    def _count_ppermute(self, p: CommPattern, x) -> None:
+        """Aggregate-counter hook (near-zero when no profiler attached)."""
+        prof = self.profile
+        if prof is not None and prof.enabled:
+            nbytes = float(sum(l.size * l.dtype.itemsize
+                               for l in jax.tree.leaves(x)))
+            prof.count(f"ppermute[n{p.n_pes},e{len(p.pairs)}]", 1, nbytes)
 
     def ppermute(self, x, perm: PatternLike):
         """Static point-to-point pattern: for each (src, dst) pair, dst
@@ -80,7 +93,10 @@ class SpmdNetOps(NetOps):
         return lax.axis_index(self.axis)
 
     def ppermute(self, x, perm):
-        rounds = as_pattern(perm, self.n_pes).unique_src_rounds()
+        p = as_pattern(perm, self.n_pes)
+        if self.profile is not None:
+            self._count_ppermute(p, x)
+        rounds = p.unique_src_rounds()
 
         def one(v):
             # destinations are disjoint across rounds and non-destinations
@@ -117,7 +133,10 @@ class SimNetOps(NetOps):
     def ppermute(self, x, perm):
         # device-resident index arrays are cached per interned pattern —
         # the hot path no longer re-uploads host indices every call
-        has, gather_idx = as_pattern(perm, self.n_pes).gather_arrays_device()
+        p = as_pattern(perm, self.n_pes)
+        if self.profile is not None:
+            self._count_ppermute(p, x)
+        has, gather_idx = p.gather_arrays_device()
 
         def one(v):
             recv = v[gather_idx]
@@ -178,6 +197,8 @@ class NocSimNetOps(SimNetOps):
         p = as_pattern(perm, self.n_pes)
         if not p.pairs:                  # empty pattern: zeros, like base
             return super().ppermute(x, p)
+        if self.profile is not None:
+            self._count_ppermute(p, x)
         n_waves, has, idx = self._wave_arrays(p)
 
         def one(v):

@@ -1,0 +1,327 @@
+"""Runtime profiler — the ``shmem_pcontrol`` analogue (DESIGN.md §13).
+
+The paper's contribution is a *measured* performance evaluation; PRs 1-4
+built an analytic selection stack (alpha-beta + congestion pricing of the
+very :class:`~repro.core.pattern.Schedule` objects that execute) but
+nothing in the runtime ever looked at what actually ran.  This module is
+the measurement half of closing that loop:
+
+  * :class:`Profiler` records one :class:`OpSample` per collective (kind,
+    interned schedule id, team shape, payload bytes, resolved algorithm /
+    chunk count / embedding, wall time, bytes moved, hottest-link load,
+    model-predicted time) plus lightweight counters for RMA and raw
+    ppermute traffic.  Attach it with ``ShmemContext(profile=...)`` (it
+    propagates to the context's :class:`~repro.core.netops.NetOps` and
+    every :class:`~repro.core.shmem.Ctx`).
+  * ``pcontrol(level)`` follows OpenSHMEM ``shmem_pcontrol`` semantics:
+    0 disables collection, 1 keeps aggregate counters, >=2 additionally
+    keeps the per-op timeline.  When disabled (or when no profiler is
+    attached — the default) the hot path pays ONE ``is None``/flag test.
+  * Samples recorded while JAX is tracing (inside ``jit``/``shard_map``
+    staging) are flagged ``traced=True``: their wall times are trace
+    times, not execution times, and the tuner's online refinement skips
+    them.  Eager SIM execution produces honest (dispatch-inclusive)
+    wall times; :func:`measure` is the jit+warmup steady-state timer the
+    calibration sweep uses (same methodology as ``benchmarks/_util``).
+  * ``to_json()``/``dump(path)`` export the aggregate counters and the
+    timeline in one machine-readable document; ``add_sink(fn)`` streams
+    every committed sample to observers (``Tuner.observe`` uses this for
+    online refinement — DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+import time
+from typing import Any, Callable
+
+
+def trace_clean() -> bool:
+    """True when called OUTSIDE any JAX trace — wall times measured here
+    are execution times; under tracing they are staging times."""
+    try:
+        import jax
+        return bool(jax.core.trace_state_clean())
+    except Exception:       # very old/new jax: assume eager
+        return True
+
+
+@dataclasses.dataclass
+class OpSample:
+    """One profiled operation — the per-op record the timeline exports.
+
+    ``kind`` distinguishes timed collectives ("collective"), non-blocking
+    RMA issues ("rma"), bare selection decisions recorded outside any
+    timed region ("selection"), and calibration measurements
+    ("measure")."""
+
+    collective: str
+    nbytes: float = 0.0
+    n_pes: int = 0
+    team: str = ""                 # group shape, e.g. "n16", "team4of16"
+    kind: str = "collective"
+    t_start: float = 0.0           # seconds since the profiler's epoch
+    wall_s: float = 0.0
+    algorithm: str = ""
+    chunks: int = 1
+    embedding: str = ""            # "", "snake", or "perm:..."
+    schedule: str = ""             # interned Schedule name (e.g. allreduce.ring)
+    n_stages: int = 0
+    bytes_moved: float = 0.0       # schedule total wire bytes
+    max_link_load: float = 0.0     # hottest stage's hottest-link multiplicity
+    predicted_s: float = float("nan")   # alpha-beta modeled time
+    traced: bool = False           # recorded under jit/shard_map staging
+    fingerprint: str = ""          # tuner topology key (tuner.fingerprint)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if d["predicted_s"] != d["predicted_s"]:     # NaN (unpredicted):
+            d["predicted_s"] = None                  # json.dump would emit
+        return d                                     # an invalid literal
+
+
+def _emb_str(embedding) -> str:
+    """Canonical string form of an embedding knob/order for sample and
+    tuning-DB keys: "" identity/off, "snake"/"auto" pass through, an
+    explicit order becomes "perm:i,j,...";"""
+    if embedding is None:
+        return ""
+    if isinstance(embedding, str):
+        return embedding
+    return "perm:" + ",".join(str(int(p)) for p in embedding)
+
+
+class Profiler:
+    """pcontrol-style runtime profiler (levels: 0 off, 1 counters,
+    >=2 counters + per-op timeline).  Thread-safe; the open-op stack is
+    thread-local so concurrent contexts don't interleave notes."""
+
+    def __init__(self, level: int = 2, max_samples: int = 100_000):
+        self.level = int(level)
+        self.max_samples = max_samples
+        self.samples: list[OpSample] = []
+        self.dropped = 0
+        self._counters: dict[str, dict[str, float]] = {}
+        self._sinks: list[Callable[[OpSample], None]] = []
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._epoch = time.perf_counter()
+
+    # -- control (shmem_pcontrol) -------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        return self.level > 0
+
+    def pcontrol(self, level: int) -> None:
+        """OpenSHMEM ``shmem_pcontrol``: 0 disables collection, 1 enables
+        the default (counters), >= 2 enables detailed collection (the
+        per-op timeline).  Takes effect on the next recorded op."""
+        self.level = int(level)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.samples = []
+            self._counters = {}
+            self.dropped = 0
+            self._epoch = time.perf_counter()
+
+    def add_sink(self, fn: Callable[[OpSample], None]) -> None:
+        """Stream every committed sample to `fn` (e.g. ``Tuner.observe``
+        for online refinement).  Sinks run synchronously at commit, after
+        the sample is final; they see disabled-level nothing."""
+        if fn not in self._sinks:
+            self._sinks.append(fn)
+
+    # -- recording -----------------------------------------------------------
+    def _open_stack(self) -> list[OpSample]:
+        st = getattr(self._tls, "open", None)
+        if st is None:
+            st = []
+            self._tls.open = st
+        return st
+
+    @contextlib.contextmanager
+    def op(self, collective: str, nbytes: float = 0.0, n_pes: int = 0,
+           team: str = "", kind: str = "collective", fingerprint: str = ""):
+        """Time a region as one op sample.  Selection notes emitted while
+        the region is open (``note``) enrich this sample; nested ``op``
+        regions record separately (innermost note wins)."""
+        if not self.enabled:
+            yield None
+            return
+        s = OpSample(collective=collective, nbytes=float(nbytes),
+                     n_pes=int(n_pes), team=team or f"n{n_pes}", kind=kind,
+                     traced=not trace_clean(), fingerprint=fingerprint)
+        stack = self._open_stack()
+        stack.append(s)
+        t0 = time.perf_counter()
+        s.t_start = t0 - self._epoch
+        try:
+            yield s
+        finally:
+            s.wall_s = time.perf_counter() - t0
+            stack.pop()
+            self._commit(s)
+
+    def note(self, algorithm: str | None = None, chunks: int | None = None,
+             schedule=None, topo=None, link=None, embedding=None,
+             collective: str | None = None, nbytes: float | None = None,
+             n_pes: int | None = None) -> None:
+        """Record the RESOLVED selection of the innermost open op (the
+        executors call this once algorithm/chunks/embedding are known —
+        DESIGN.md §13).  The note only enriches an open op of the SAME
+        collective (or one opened without a name): a selection made
+        inside some other timed region — e.g. a ``Comm`` allreduce
+        traced inside a ``train_step`` op — must not relabel that
+        region's sample, so it commits a bare "selection" sample
+        instead (visible in the level >= 2 timeline)."""
+        if not self.enabled:
+            return
+        stack = self._open_stack()
+        matches = bool(stack) and (
+            collective is None or not stack[-1].collective
+            or stack[-1].collective == collective)
+        if matches:
+            s = stack[-1]
+        else:
+            stack = []                  # commit as a standalone selection
+            s = OpSample(collective=collective or "", kind="selection",
+                         t_start=time.perf_counter() - self._epoch,
+                         traced=not trace_clean())
+        if algorithm is not None:
+            s.algorithm = algorithm
+        if chunks is not None:
+            s.chunks = int(chunks)
+        if embedding is not None:
+            s.embedding = _emb_str(embedding)
+        if collective is not None and not s.collective:
+            s.collective = collective
+        if nbytes is not None and not s.nbytes:
+            s.nbytes = float(nbytes)
+        if n_pes is not None and not s.n_pes:
+            s.n_pes = int(n_pes)
+            if not s.team:
+                s.team = f"n{s.n_pes}"
+        if schedule is not None:
+            s.schedule = schedule.name
+            s.n_stages = len(schedule.stages)
+            s.bytes_moved = float(schedule.total_bytes())
+            try:
+                s.max_link_load = max(
+                    (st.pattern.max_link_load(topo)
+                     for st in schedule.stages), default=0.0)
+            except Exception:
+                s.max_link_load = 0.0
+            if link is not None:
+                s.predicted_s = schedule.pipelined_time(
+                    max(s.chunks, 1), topo, link)
+        if not stack:
+            self._commit(s)
+
+    def count(self, key: str, n: int = 1, nbytes: float = 0.0) -> None:
+        """Bare aggregate counter (no timeline entry) — what the NetOps
+        ppermute hook uses; near-zero cost, safe under tracing."""
+        if not self.enabled:
+            return
+        with self._lock:
+            c = self._counters.setdefault(
+                key, {"count": 0.0, "total_s": 0.0, "total_bytes": 0.0})
+            c["count"] += n
+            c["total_bytes"] += float(nbytes)
+
+    def record_rma(self, op: str, nbytes: float, pattern=None,
+                   n_pes: int = 0) -> None:
+        """One non-blocking RMA issue (put_nbi/get_nbi) — counters always,
+        a timeline entry at level >= 2.  No wall time: completion is
+        pinned later by quiet()."""
+        if not self.enabled:
+            return
+        self.count(f"rma.{op}", 1, nbytes)
+        if self.level >= 2:
+            s = OpSample(collective=op, kind="rma", nbytes=float(nbytes),
+                         n_pes=n_pes,
+                         t_start=time.perf_counter() - self._epoch,
+                         traced=not trace_clean())
+            if pattern is not None:
+                s.n_stages = 1
+                s.bytes_moved = float(nbytes) * max(len(pattern.pairs), 1)
+            with self._lock:
+                if len(self.samples) < self.max_samples:
+                    self.samples.append(s)
+                else:
+                    self.dropped += 1
+
+    def _commit(self, s: OpSample) -> None:
+        key = f"{s.kind}.{s.collective}" + (
+            f".{s.algorithm}" if s.algorithm else "")
+        with self._lock:
+            c = self._counters.setdefault(
+                key, {"count": 0.0, "total_s": 0.0, "total_bytes": 0.0})
+            c["count"] += 1
+            c["total_s"] += s.wall_s
+            c["total_bytes"] += s.nbytes
+            if self.level >= 2:
+                if len(self.samples) < self.max_samples:
+                    self.samples.append(s)
+                else:
+                    self.dropped += 1
+        for sink in self._sinks:
+            sink(s)
+
+    # -- export --------------------------------------------------------------
+    def counters(self) -> dict[str, dict[str, float]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._counters.items()}
+
+    def timeline(self) -> list[dict]:
+        with self._lock:
+            return [s.to_dict() for s in self.samples]
+
+    def to_json(self) -> dict:
+        return {
+            "schema": 1,
+            "level": self.level,
+            "dropped": self.dropped,
+            "counters": self.counters(),
+            "timeline": self.timeline(),
+        }
+
+    def dump(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+
+def measure(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            profile: Profiler | None = None, **sample_kw) -> float:
+    """Steady-state wall time per call, seconds: jit, force the first
+    compile+run, warm up, then average `iters` dispatches — the single
+    copy of the calibration methodology (``Tuner.tune`` and the bench
+    harnesses measure identically).  With `profile`, commits one
+    "measure"-kind sample carrying `sample_kw`."""
+    import jax
+    jitted = jax.jit(fn)
+    out = jitted(*args)
+    jax.block_until_ready(out)
+    for _ in range(max(warmup - 1, 0)):
+        jax.block_until_ready(jitted(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(*args)
+    jax.block_until_ready(out)
+    t = (time.perf_counter() - t0) / iters
+    if profile is not None and profile.enabled:
+        s = OpSample(collective=sample_kw.pop("collective", "measure"),
+                     kind="measure", wall_s=t,
+                     t_start=t0 - profile._epoch)
+        emb = sample_kw.pop("embedding", None)
+        if emb is not None:
+            s.embedding = _emb_str(emb)
+        for k, v in sample_kw.items():
+            if hasattr(s, k):
+                setattr(s, k, v)
+        if not s.team:
+            s.team = f"n{s.n_pes}"
+        profile._commit(s)
+    return t

@@ -23,6 +23,7 @@ per-destination-PE ordering on the pending queue WITHOUT completing it
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -33,9 +34,13 @@ from jax import lax
 
 from . import collectives as coll
 from . import team as team_mod
+from . import tuner as tuner_mod
 from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, PatternLike, as_pattern
+from .profile import Profiler
 from .topology import MeshTopology
+
+_NULL_CM = contextlib.nullcontext()
 
 
 @dataclasses.dataclass(eq=False)    # a handle: identity, not value, equality
@@ -125,6 +130,9 @@ class Ctx:
                    seq=self._op_seq)
         self._op_seq += 1
         self._pending.append(f)
+        prof = self.shmem.profile
+        if prof is not None and prof.enabled:
+            prof.record_rma(op, nbytes, pattern, n_pes=self.n_pes)
         return f
 
     @property
@@ -165,6 +173,10 @@ class Ctx:
                 "per-context isolation means each context drains its own "
                 "queue; call that context's quiet()")
         fs = sorted(fs, key=lambda f: f.seq)     # completion in issue order
+        prof = self.shmem.profile
+        if prof is not None and prof.enabled:
+            prof.count("quiet.drained", len(fs),
+                       sum(f.nbytes for f in fs))
         vals = [f.value for f in fs]
         fenced = lax.optimization_barrier(tuple(vals))
         for f, v in zip(fs, fenced):
@@ -206,7 +218,8 @@ class ShmemContext:
     """One PE's view of the library (SPMD) or the whole chip's (SIM)."""
 
     def __init__(self, net: NetOps, topo: MeshTopology | None = None,
-                 use_wand_barrier: bool = False, link=None, embedding=None):
+                 use_wand_barrier: bool = False, link=None, embedding=None,
+                 profile=None, tuner=None):
         self.net = net
         self.topo = topo
         self.use_wand_barrier = use_wand_barrier
@@ -219,10 +232,65 @@ class ShmemContext:
         # order run ring algorithms in mesh-embedded coordinates (and
         # "auto" selection prices the embedded candidates).
         self.embedding = embedding
+        # pcontrol-style profiler (DESIGN.md §13): one op sample per
+        # collective, RMA counters, JSON export.  Propagated to the
+        # NetOps backend so raw ppermute traffic lands in its counters.
+        # When None (the default) the hot path pays one `is None` test.
+        self.profile = profile
+        # measured-performance autotuner: a Tuner (whose DB then also
+        # refines ONLINE from this context's profiler samples) or a bare
+        # TunedSelector; choose_algorithm/choose_schedule/choose_chunks/
+        # choose_embedding consult it before the analytic model.
+        self.tuner = tuner
+        self._sel = tuner.selector() if hasattr(tuner, "selector") else tuner
+        self._fp = tuner_mod.fingerprint(topo, net.n_pes)
+        if profile is not None:
+            net.profile = profile
+            if hasattr(tuner, "observe"):
+                profile.add_sink(tuner.observe)
         # The default communication context: ShmemContext-level nbi RMA,
         # quiet and fence run on it, so shmem_quiet stays oblivious to
         # traffic issued on explicitly-created contexts (DESIGN.md §11).
         self.ctx_default = Ctx(self)
+
+    # -- profiling control (shmem_pcontrol; DESIGN.md §13) -------------------
+    def pcontrol(self, level: int) -> None:
+        """``shmem_pcontrol``: 0 disables collection, 1 enables counters,
+        >= 2 enables the per-op timeline.  Attaches a fresh
+        :class:`~repro.core.profile.Profiler` when none was passed at
+        construction (so ``ctx.pcontrol(2)`` alone turns profiling on)."""
+        if self.profile is None:
+            if level <= 0:
+                return
+            self.profile = Profiler(level=level)
+            self.net.profile = self.profile
+            if hasattr(self.tuner, "observe"):
+                self.profile.add_sink(self.tuner.observe)
+        else:
+            self.profile.pcontrol(level)
+
+    def _active_profile(self):
+        p = self.profile
+        return p if (p is not None and p.enabled) else None
+
+    def _group_desc(self, group) -> str:
+        if group is None:
+            return f"n{self.n_pes}"
+        if isinstance(group, team_mod.TeamPartition):
+            return f"part{group.n_teams}x{group.size}"
+        return f"team{group.size}of{group.world_n}"
+
+    def _prof_op(self, collective: str, x=None, group=None):
+        """(context manager, active profiler): the timing wrapper every
+        collective method runs under.  One `is None` test when profiling
+        is off — the near-zero disabled path."""
+        prof = self._active_profile()
+        if prof is None:
+            return _NULL_CM, None
+        nbytes = coll._payload_bytes(self.net, x) if x is not None else 0.0
+        return prof.op(collective, nbytes=nbytes, n_pes=self.n_pes,
+                       team=self._group_desc(group),
+                       fingerprint=self._fp), prof
 
     # -- setup / query ------------------------------------------------------
     @property
@@ -377,27 +445,40 @@ class ShmemContext:
         """algorithm: None/"dissem" (the paper's dissemination barrier),
         "tree" (binomial gather + broadcast), or "auto" (congestion-model
         pick between the two)."""
-        return coll.barrier(self.net, token, team=team, algorithm=algorithm,
-                            topo=self.topo, link=self.link)
+        cm, prof = self._prof_op("barrier", group=team)
+        with cm:
+            return coll.barrier(self.net, token, team=team,
+                                algorithm=algorithm,
+                                topo=self.topo, link=self.link,
+                                profile=prof)
 
     def broadcast(self, x, root: int = 0, pipeline_chunks=None, team=None):
         """With `team`, `root` is a TEAM rank; non-members keep x."""
-        return coll.broadcast(self.net, x, root,
-                              pipeline_chunks=pipeline_chunks,
-                              topo=self.topo, link=self.link, team=team)
+        cm, prof = self._prof_op("broadcast", x, team)
+        with cm:
+            return coll.broadcast(self.net, x, root,
+                                  pipeline_chunks=pipeline_chunks,
+                                  topo=self.topo, link=self.link, team=team,
+                                  profile=prof, tuner=self._sel)
 
     def collect(self, x, axis: int = 0, pipeline_chunks=None, team=None):
-        return coll.collect(self.net, x, axis,
-                            pipeline_chunks=pipeline_chunks,
-                            topo=self.topo, link=self.link, team=team,
-                            embedding=self.embedding)
+        cm, prof = self._prof_op("collect", x, team)
+        with cm:
+            return coll.collect(self.net, x, axis,
+                                pipeline_chunks=pipeline_chunks,
+                                topo=self.topo, link=self.link, team=team,
+                                embedding=self.embedding,
+                                profile=prof, tuner=self._sel)
 
     def fcollect(self, x, axis: int = 0, algorithm=None,
                  pipeline_chunks=None, team=None):
-        return coll.fcollect(self.net, x, axis, algorithm,
-                             pipeline_chunks=pipeline_chunks,
-                             topo=self.topo, link=self.link, team=team,
-                             embedding=self.embedding)
+        cm, prof = self._prof_op("fcollect", x, team)
+        with cm:
+            return coll.fcollect(self.net, x, axis, algorithm,
+                                 pipeline_chunks=pipeline_chunks,
+                                 topo=self.topo, link=self.link, team=team,
+                                 embedding=self.embedding,
+                                 profile=prof, tuner=self._sel)
 
     def to_all(self, x, op: str = "sum", algorithm=None,
                pipeline_chunks=None, team=None, partition=None,
@@ -416,19 +497,29 @@ class ShmemContext:
         two-level schedule to the "auto" candidates (algorithm="hier"
         forces it)."""
         team = self._resolve_team(team, PE_start, logPE_stride, PE_size)
-        return coll.allreduce(self.net, x, op, algorithm=algorithm,
-                              topo=self.topo, link=self.link,
-                              pipeline_chunks=pipeline_chunks,
-                              team=team, partition=partition,
-                              embedding=self.embedding)
+        cm, prof = self._prof_op("allreduce", x,
+                                 team if team is not None else partition)
+        with cm:
+            return coll.allreduce(self.net, x, op, algorithm=algorithm,
+                                  topo=self.topo, link=self.link,
+                                  pipeline_chunks=pipeline_chunks,
+                                  team=team, partition=partition,
+                                  embedding=self.embedding,
+                                  profile=prof, tuner=self._sel)
 
     def reduce_scatter(self, x, op: str = "sum", team=None):
-        return coll.reduce_scatter(self.net, x, op, team=team)
+        cm, prof = self._prof_op("reduce_scatter", x, team)
+        with cm:
+            return coll.reduce_scatter(self.net, x, op, team=team,
+                                       profile=prof)
 
     def alltoall(self, x, axis: int = 0, pipeline_chunks=None, team=None):
-        return coll.alltoall(self.net, x, axis,
-                             pipeline_chunks=pipeline_chunks,
-                             topo=self.topo, link=self.link, team=team)
+        cm, prof = self._prof_op("alltoall", x, team)
+        with cm:
+            return coll.alltoall(self.net, x, axis,
+                                 pipeline_chunks=pipeline_chunks,
+                                 topo=self.topo, link=self.link, team=team,
+                                 profile=prof, tuner=self._sel)
 
     # -- atomics (§3.5) ---------------------------------------------------------
     def testset(self, var, value):

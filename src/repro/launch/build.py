@@ -101,7 +101,8 @@ def make_init_fn(cfg: ModelConfig, mesh, backend: str = "shmem"):
 def make_train_step(cfg: ModelConfig, mesh, backend: str = "shmem",
                     fuse_grads: bool = True, allreduce_algo: str = "paper",
                     grad_rs: bool | str = False, pipeline_chunks=None,
-                    topo=None, link=None, embedding=None):
+                    topo=None, link=None, embedding=None, autotune=None,
+                    profile=None):
     dp, tp, pod = mesh_dims(mesh)
     axes = axis_spec(mesh, cfg)
     shapes, pspecs = abstract_params(cfg, mesh)
@@ -116,7 +117,8 @@ def make_train_step(cfg: ModelConfig, mesh, backend: str = "shmem",
                                   grad_rs=grad_rs,
                                   pipeline_chunks=pipeline_chunks,
                                   topo=topo, link=link,
-                                  embedding=embedding)
+                                  embedding=embedding, autotune=autotune,
+                                  profile=profile)
     bspecs_fn = lambda batch: sharding.batch_specs(
         cfg, batch, mesh_axes(mesh, cfg), "train")
     def wrap(batch_tree):

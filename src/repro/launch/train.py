@@ -56,6 +56,21 @@ def main(argv=None):
                          "model (--allreduce-algo auto, --embedding) real "
                          "hop/contention costs. Without it, --embedding "
                          "falls back to a near-square guess")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measured-performance selection (DESIGN §13): "
+                         "calibrate the data-axis mesh with a small SIM "
+                         "sweep when the tuning DB has no entries for it, "
+                         "then let every 'auto' selection consult the "
+                         "measured-best variant before the analytic model")
+    ap.add_argument("--tuning-db", default="",
+                    help="path of the persistent tuning database (JSON); "
+                         "loaded when it exists, saved after the run — a "
+                         "training run warms it, later runs inherit the "
+                         "measured-best picks")
+    ap.add_argument("--profile-out", default="",
+                    help="attach the pcontrol-style runtime profiler and "
+                         "dump its JSON (counters + per-op/step timeline) "
+                         "to this path at exit (DESIGN §13)")
     ap.add_argument("--remat", default=None,
                     choices=[None, "none", "full", "selective"],
                     help="override the config remat policy (§Perf P5)")
@@ -124,11 +139,39 @@ def main(argv=None):
             print("[train] --embedding ignored: with --pod, pass --topo "
                   "to state the data-axis layout explicitly")
             embedding = None
+        profiler = None
+        if args.profile_out:
+            from ..core.profile import Profiler
+            profiler = Profiler(level=2)
+        tuner = None
+        if args.autotune or args.tuning_db:
+            from ..core import sim_ctx
+            from ..core import tuner as tuner_mod
+            tuner = tuner_mod.Tuner(path=args.tuning_db or None)
+            if args.autotune and args.data > 1:
+                # warm the DB for the data-axis mesh when it holds no
+                # measurements for this fingerprint yet: a small SIM
+                # sweep on this host — the SPMD step then inherits the
+                # measured-best picks by topology fingerprint (§13)
+                fp = tuner_mod.fingerprint(topo, args.data)
+                if not any(k.startswith(fp + "|")
+                           for k in tuner.db.entries):
+                    print(f"[train] autotune: calibrating {fp} "
+                          "(small SIM sweep)")
+                    summary = tuner.tune(
+                        sim_ctx(args.data, topo),
+                        {"collectives": ("allreduce",),
+                         "sizes": (4096, 65536, 1 << 20),
+                         "chunks": (1, 4), "iters": 3, "warmup": 1})
+                    print(f"[train] autotune: measured "
+                          f"{summary['variants']} variants; best "
+                          f"{summary['best']}")
         init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh)
         wrap, _, (oshapes, ospecs), ocfg = build.make_train_step(
             cfg, mesh, args.comm, allreduce_algo=args.allreduce_algo,
             grad_rs=grad_rs, pipeline_chunks=chunks,
-            topo=topo, embedding=embedding)
+            topo=topo, embedding=embedding,
+            autotune=tuner if args.autotune else None, profile=profiler)
         ocfg = dataclasses.replace(ocfg, lr=args.lr)
 
         batch0 = pipe.batch(0)
@@ -151,12 +194,15 @@ def main(argv=None):
                 params, opt_state = restored["params"], restored["opt"]
                 print(f"[train] resumed from step {start}")
 
+        import contextlib
         losses = []
         for step in range(start, args.steps):
             t0 = time.time()
             batch = jax.tree.map(jnp.asarray, pipe.batch(step))
-            loss, params, opt_state = step_fn(params, opt_state, batch)
-            loss = float(loss)
+            with (profiler.op("train_step", n_pes=mesh.devices.size)
+                  if profiler is not None else contextlib.nullcontext()):
+                loss, params, opt_state = step_fn(params, opt_state, batch)
+                loss = float(loss)        # sync: the sample times the step
             losses.append(loss)
             print(f"[train] step {step:5d} loss {loss:8.4f} "
                   f"({time.time() - t0:.2f}s)")
@@ -166,6 +212,13 @@ def main(argv=None):
         if ft:
             ft.finalize(args.steps, lambda: {"params": params,
                                              "opt": opt_state})
+        if tuner is not None and args.tuning_db:
+            tuner.save(args.tuning_db)
+            print(f"[train] tuning DB ({len(tuner.db)} points) saved to "
+                  f"{args.tuning_db}")
+        if profiler is not None:
+            profiler.dump(args.profile_out)
+            print(f"[train] profile dumped to {args.profile_out}")
         assert np.isfinite(losses).all(), "NaN/inf loss"
         if len(losses) >= 10:
             a, b = np.mean(losses[:3]), np.mean(losses[-3:])

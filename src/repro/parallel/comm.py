@@ -81,12 +81,20 @@ class Comm:
                        Requires `topo`; rank remapping keeps every ring
                        hop a physical mesh hop and the hot link at load 1
                        where the mesh admits a Hamiltonian cycle
+      tuner          : measured-performance autotuner (core.tuner.Tuner
+                       or TunedSelector, DESIGN.md §13): every "auto"
+                       selection consults the tuning DB's measured-best
+                       variant first and falls back to the analytic
+                       model on unmeasured points
+      profile        : core.profile.Profiler; collective selections made
+                       while the step traces land in its timeline
     """
 
     def __init__(self, axes: AxisSpec, backend: str = "shmem",
                  allreduce_algo: str = "paper", grad_rs: bool = False,
                  topo: MeshTopology | None = None, link=None,
-                 pipeline_chunks=None, embedding=None):
+                 pipeline_chunks=None, embedding=None, tuner=None,
+                 profile=None):
         assert backend in ("shmem", "xla")
         assert allreduce_algo in ("paper", "auto", "rd", "ring", "ring_emb",
                                   "hier")
@@ -98,7 +106,20 @@ class Comm:
         self.link = link
         self.pipeline_chunks = pipeline_chunks
         self.embedding = embedding
+        # measured-performance autotuning (DESIGN.md §13): a
+        # core.tuner.Tuner or TunedSelector whose DB the "auto" selectors
+        # consult before the analytic model; misses fall back to pricing.
+        self.tuner = tuner
+        self._sel = tuner.selector() if hasattr(tuner, "selector") else tuner
+        # attached profiler: selection decisions made while the step is
+        # traced land in its timeline as "selection" samples (wall times
+        # under tracing are staging times and are flagged as such).
+        self.profile = profile
         self._partitions: dict[int, team_mod.TeamPartition | None] = {}
+
+    def _prof(self):
+        p = self.profile
+        return p if (p is not None and p.enabled) else None
 
     # -- helpers -------------------------------------------------------------
     def _net(self, axis) -> SpmdNetOps:
@@ -171,7 +192,9 @@ class Comm:
                                      topo=self._topo_for(net), link=self.link,
                                      pipeline_chunks=self.pipeline_chunks,
                                      partition=part,
-                                     embedding=self._embedding_for(net)), x)
+                                     embedding=self._embedding_for(net),
+                                     profile=self._prof(),
+                                     tuner=self._sel), x)
 
     def allgather(self, x, axis, *, concat_axis: int = 0):
         if axis is None or axis == ():
@@ -181,7 +204,8 @@ class Comm:
         net = self._net(axis)
         return coll.fcollect(net, x, axis=concat_axis,
                              topo=self._topo_for(net), link=self.link,
-                             embedding=self._embedding_for(net))
+                             embedding=self._embedding_for(net),
+                             profile=self._prof(), tuner=self._sel)
 
     def reduce_scatter(self, x, axis, *, op: str = "sum", scatter_axis: int = 0):
         if self.backend == "xla":
@@ -208,7 +232,8 @@ class Comm:
             return lax.all_to_all(x, axis, split_axis=split_axis,
                                   concat_axis=concat_axis, tiled=True)
         assert split_axis == concat_axis, "shmem alltoall is in-place ragged"
-        return coll.alltoall(self._net(axis), x, axis=split_axis)
+        return coll.alltoall(self._net(axis), x, axis=split_axis,
+                             profile=self._prof(), tuner=self._sel)
 
     def broadcast(self, x, axis, root: int = 0):
         if self.backend == "xla":
@@ -217,7 +242,8 @@ class Comm:
             masked = jax.tree.map(
                 lambda v: jnp.where(idx == root, v, jnp.zeros_like(v)), x)
             return jax.tree.map(lambda v: lax.psum(v, axis), masked)
-        return coll.broadcast(self._net(axis), x, root)
+        return coll.broadcast(self._net(axis), x, root,
+                              profile=self._prof(), tuner=self._sel)
 
     def ppermute(self, x, axis, perm):
         return lax.ppermute(x, axis, perm)

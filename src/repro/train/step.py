@@ -92,7 +92,8 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
                      adamw: opt.AdamWConfig | None = None,
                      fuse_grads: bool = True, allreduce_algo: str = "paper",
                      grad_rs: bool | str = False, pipeline_chunks=None,
-                     topo=None, link=None, embedding=None):
+                     topo=None, link=None, embedding=None, autotune=None,
+                     profile=None):
     """Returns step(params, opt_state, batch) -> (loss, params, opt_state)
     to be wrapped in shard_map by the launcher.
 
@@ -105,7 +106,12 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
     allreduce_algo="auto", bucket syncs may take the hierarchical
     two-level allreduce over the mesh's row teams (DESIGN.md §11).
     embedding ("auto"/"snake"/an order, with topo) runs ring syncs in
-    mesh-embedded coordinates — every ring hop one physical hop (§12)."""
+    mesh-embedded coordinates — every ring hop one physical hop (§12).
+    autotune is a measured-performance tuner (core.tuner.Tuner /
+    TunedSelector): every "auto" selection in the step consults its
+    tuning DB's measured-best variant before the analytic model
+    (DESIGN.md §13); profile attaches a core.profile.Profiler so the
+    selections the traced step makes are recorded."""
     adamw = adamw or opt.AdamWConfig(moment_dtype=cfg.moment_dtype)
 
     def step(params, opt_state, batch):
@@ -121,7 +127,8 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
             rs = synced_bytes >= GRAD_RS_AUTO_BYTES
         comm = Comm(axes, backend, allreduce_algo=allreduce_algo,
                     grad_rs=rs, pipeline_chunks=pipeline_chunks,
-                    topo=topo, link=link, embedding=embedding)
+                    topo=topo, link=link, embedding=embedding,
+                    tuner=autotune, profile=profile)
         # clamp grad-accumulation to the local batch (a bigger mesh shrinks
         # B_local; slicing zero-size microbatches would silently no-op)
         b_local = jax.tree.leaves(batch)[0].shape[0]

@@ -89,3 +89,85 @@ def test_pack_mixed_dtypes():
     out = unpack(pack(tree, spec), spec)
     assert out[0].dtype == jnp.bfloat16 and out[1].dtype == jnp.int32
     np.testing.assert_allclose(np.asarray(out[1]), np.arange(4))
+
+
+# ---------------------------------------------------------------------------
+# alignment-padding paths of the pytree packing
+# ---------------------------------------------------------------------------
+
+def test_plan_pack_alignment_padding_layout():
+    # leaf sizes 5 and 3 force padding to the 128-element lane boundary
+    tree = [jnp.arange(5, dtype=jnp.float32), jnp.ones((3,), jnp.float32)]
+    spec = plan_pack(tree)
+    assert spec.offsets == (0, 128)          # 5 elements round up to 128
+    assert spec.total == 256                 # trailing pad to a lane too
+    spec8 = plan_pack(tree, align_elems=8)
+    assert spec8.offsets == (0, 8)
+    assert spec8.total == 16
+
+
+def test_plan_pack_scalar_leaves():
+    # shape-() leaves occupy one element but still pad to the alignment
+    tree = {"a": jnp.asarray(3.0), "b": jnp.asarray(4.0)}
+    spec = plan_pack(tree)
+    assert spec.shapes == ((), ())
+    assert spec.offsets == (0, 128) and spec.total == 256
+    out = unpack(pack(tree, spec), spec)
+    assert float(out["a"]) == 3.0 and float(out["b"]) == 4.0
+    assert out["a"].shape == ()
+
+
+def test_pack_padding_gaps_stay_zero():
+    tree = [jnp.ones((5,), jnp.float32), 2 * jnp.ones((3,), jnp.float32)]
+    buf = np.asarray(pack(tree, plan_pack(tree)))
+    assert np.all(buf[5:128] == 0)           # inter-leaf pad
+    assert np.all(buf[131:] == 0)            # trailing pad
+    assert np.all(buf[:5] == 1) and np.all(buf[128:131] == 2)
+
+
+def test_pack_unpack_padded_roundtrip_multidim():
+    # 2-D leaves whose flat sizes are NOT lane multiples: the padded
+    # layout must restore exact shapes and values
+    tree = [jnp.asarray(np.random.RandomState(0).randn(3, 7)
+                        .astype(np.float32)),
+            jnp.asarray(np.random.RandomState(1).randn(2, 2, 5)
+                        .astype(np.float32))]
+    spec = plan_pack(tree)
+    assert all(o % 128 == 0 for o in spec.offsets)
+    out = unpack(pack(tree, spec), spec)
+    for a, b in zip(out, tree):
+        assert a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# free()/realloc() rule error messages (paper §3.2 rules 1-2)
+# ---------------------------------------------------------------------------
+
+def test_free_error_messages_are_explicit():
+    h = SymmetricHeap(1024)
+    a = h.malloc(64)
+    b = h.malloc(64)
+    h.free(a)                                # frees the series (rule 1)
+    with pytest.raises(HeapError, match="unknown or already-freed"):
+        h.free(b)
+    with pytest.raises(HeapError, match="unknown or already-freed"):
+        h.free(a)                            # double free of the head too
+
+
+def test_realloc_error_message_is_explicit():
+    h = SymmetricHeap(1024)
+    a = h.malloc(64)
+    h.malloc(64)
+    with pytest.raises(HeapError, match="last allocation"):
+        h.realloc(a, 128)
+
+
+def test_free_head_then_malloc_reuses_offset():
+    h = SymmetricHeap(1024)
+    a = h.malloc(100)
+    h.malloc(50)
+    h.free(a)                                # brk returns to a.offset
+    c = h.malloc(10)
+    assert c.offset == a.offset
+    assert h.brk == c.offset + 10

@@ -1,0 +1,177 @@
+"""Fused comm-compute benchmark (DESIGN.md §14).
+
+Two sections, one per flagship fused path:
+
+  1. Ring vs monolithic attention cross-over by sequence length: measured
+     SIM wall time of the ring-attention pipeline (put_nbi KV rotation
+     hidden behind each block's flash partials) against
+     allgather-KV-then-monolithic-flash, with choose_attention's modeled
+     pricing and pick alongside.
+  2. Fused reduce-scatter->AdamW vs the unfused composition (ring RS +
+     f32 allgather + separate optimizer pass): WIRE BYTES from the
+     profiler's ppermute counters — the fused path allgathers updated
+     params at param dtype (bf16 here), so it must move strictly fewer
+     bytes — plus steady-state wall time and choose_grad_rs's pick.
+
+  PYTHONPATH=src python -m benchmarks.bench_fused
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import collectives as coll, fusion, sim_ctx
+from repro.core.netops import SimNetOps
+from repro.core.profile import Profiler
+from repro.kernels import ring_attention as ra
+
+from ._util import time_fn as _time
+
+N = 4
+ROWS: list[tuple] = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+# -- 1. ring vs monolithic attention -----------------------------------------
+
+def _attn_payload(L, B=1, H=4, D=32, seed=0):
+    rng = np.random.default_rng(seed)
+    Ls = L // N
+
+    def shard(x):
+        return jnp.asarray(
+            x.reshape(B, H, N, Ls, D).transpose(2, 0, 1, 3, 4))
+
+    q = rng.standard_normal((B, H, L, D)).astype(np.float32)
+    k = rng.standard_normal((B, H, L, D)).astype(np.float32)
+    v = rng.standard_normal((B, H, L, D)).astype(np.float32)
+    pos = jnp.arange(L, dtype=jnp.int32).reshape(N, Ls)
+    return shard(q), shard(k), shard(v), pos
+
+
+def bench_ring_attention():
+    print("\n== ring vs monolithic attention (SIM, n=%d) ==" % N)
+    ctx = sim_ctx(N)
+    net = ctx.net
+    for L in (256, 1024, 4096):
+        qs, ks, vs, pos = _attn_payload(L)
+        kv_block_bytes = 2 * ks[0].size * 4          # one PE's K+V shard
+
+        def ring(q_, k_, v_, p_):
+            return fusion.ring_attention(ctx, q_, k_, v_, p_, p_,
+                                         causal=True)
+
+        kpos_full = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (N, L))
+
+        def mono(q_, k_, v_, p_, kp_):
+            kf = coll.fcollect(net, k_, axis=2)
+            vf = coll.fcollect(net, v_, axis=2)
+            part = coll._lmap(
+                net, lambda a, b, c, d, e: ra.attn_block_partials(
+                    a, b, c, d, e, causal=True), q_, kf, vf, p_, kp_)
+            return ra.finalize(part, q_.dtype)
+
+        t_ring = _time(ring, qs, ks, vs, pos)
+        t_mono = _time(mono, qs, ks, vs, pos, kpos_full)
+        # price it the way the selector does: per-block compute measured
+        # as the monolithic time split over n blocks
+        pick, times = fusion.choose_attention(N, kv_block_bytes,
+                                              t_mono / N)
+        row(f"attn_mono_{kv_block_bytes}B_us", t_mono * 1e6,
+            f"L={L} allgather-KV+flash")
+        row(f"attn_ring_{kv_block_bytes}B_us", t_ring * 1e6,
+            f"L={L} x{t_mono / max(t_ring, 1e-12):.2f}vs-mono "
+            f"pred={times['ring'] * 1e6:.2f}us pick={pick}")
+
+
+# -- 2. fused RS->AdamW: wire bytes + wall time ------------------------------
+
+_HP = dict(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd_coef=0.1)
+
+
+def _grad_fns(net, total, wd):
+    def fused(g, p, m, v):
+        t = jnp.asarray(1.0, jnp.float32)
+        c1 = 1.0 - _HP["b1"] ** t
+        c2 = 1.0 - _HP["b2"] ** t
+        new_p, new_m, new_v, info = fusion.fused_rs_adam(
+            net, g, p, m, v, wd, c1, c2, scale=float(N),
+            out_dtype=jnp.bfloat16, **_HP)
+        return coll.allgather_unpad(net, new_p, info), new_m, new_v
+
+    def unfused(g, p, m, v):
+        t = jnp.asarray(1.0, jnp.float32)
+        c1 = 1.0 - _HP["b1"] ** t
+        c2 = 1.0 - _HP["b2"] ** t
+        own, info = coll.reduce_scatter(net, g)
+        gm = coll.allgather_unpad(net, own, info) / float(N)
+        m = _HP["b1"] * m + (1.0 - _HP["b1"]) * gm
+        v = _HP["b2"] * v + (1.0 - _HP["b2"]) * gm * gm
+        upd = (m / c1) / (jnp.sqrt(v / c2) + _HP["eps"])
+        upd = jnp.where(wd != 0, upd + _HP["wd_coef"] * p, upd)
+        return (p - _HP["lr"] * upd).astype(jnp.bfloat16), m, v
+
+    return fused, unfused
+
+
+def _wire_bytes(net, fn, *args) -> float:
+    """Total ppermute payload bytes for ONE eager execution of fn."""
+    prof = Profiler(level=1)
+    net.profile = prof
+    try:
+        jax.block_until_ready(fn(*args))
+    finally:
+        net.profile = None
+    return sum(c["total_bytes"] for k, c in prof.counters().items()
+               if k.startswith("ppermute"))
+
+
+def bench_fused_grad_rs():
+    print("\n== fused RS->AdamW vs unfused (SIM, n=%d, bf16 params) ==" % N)
+    net = SimNetOps(N)
+    rng = np.random.default_rng(1)
+    for total in (1 << 14, 1 << 22):
+        nbytes = total * 4                      # f32 bucket bytes per PE
+        chunk = -(-total // N)
+        g = jnp.asarray(rng.standard_normal((N, total)).astype(np.float32))
+        p = jnp.asarray(np.broadcast_to(
+            rng.standard_normal(total).astype(np.float32),
+            (N, total)).copy())
+        wd = jnp.asarray(np.ones(total, np.int8))
+        fused, unfused = _grad_fns(net, total, wd)
+        m_c = jnp.zeros((N, chunk), jnp.float32)
+        v_c = jnp.zeros((N, chunk), jnp.float32)
+        m_f = jnp.zeros((N, total), jnp.float32)
+        v_f = jnp.zeros((N, total), jnp.float32)
+        b_fused = _wire_bytes(net, fused, g, p, m_c, v_c)
+        b_unfused = _wire_bytes(net, unfused, g, p, m_f, v_f)
+        # alternate A/B rounds and take each side's median: measurement
+        # position shifts CPU allocator warmth by up to ~2x per round
+        tf_r, tu_r = [], []
+        for _ in range(3):
+            tf_r.append(_time(fused, g, p, m_c, v_c))
+            tu_r.append(_time(unfused, g, p, m_f, v_f))
+        t_fused = float(np.median(tf_r))
+        t_unfused = float(np.median(tu_r))
+        pick, times = fusion.choose_grad_rs(N, nbytes, param_itemsize=2)
+        row(f"grad_rs_unfused_{nbytes}B_us", t_unfused * 1e6,
+            f"bytes={b_unfused:.0f} rs+f32-allgather+adam")
+        saved = (1.0 - b_fused / max(b_unfused, 1.0)) * 100.0
+        ok = "" if b_fused < b_unfused else " WARN_no_bytes_win"
+        row(f"grad_rs_fused_{nbytes}B_us", t_fused * 1e6,
+            f"bytes={b_fused:.0f} saved={saved:.0f}%{ok} "
+            f"pred={times['fused'] * 1e6:.2f}us pick={pick}")
+
+
+def main():
+    bench_ring_attention()
+    bench_fused_grad_rs()
+
+
+if __name__ == "__main__":
+    main()

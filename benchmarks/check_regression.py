@@ -1,0 +1,93 @@
+"""CI perf gate: compare a fresh bench run's ``measured_us`` at PINNED
+grid points against a committed ``BENCH_*.json`` baseline and fail on a
+>25% regression.
+
+The pins are (bench, row-name) pairs whose name embeds the payload size,
+so the same grid point is re-measured run over run (benchmarks/run.py's
+standardized rows).  Rows below ``--min-us`` are skipped — alpha-scale
+rows are timer noise on shared runners.
+
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      --baseline BENCH_6.json --current bench-reports/BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+
+# Pinned grid points: stable, size-suffixed rows present in the
+# bench-smoke subset (patterns + fused) AND in the full committed run.
+PINS: list[tuple[str, str]] = [
+    ("patterns", "allreduce_rd_65536B"),
+    ("patterns", "allreduce_ring_65536B"),
+    ("patterns", "fcollect_rd_65536B"),
+    ("patterns", "alltoall_65536B"),
+    ("fused", "attn_ring_262144B_us"),
+    ("fused", "attn_mono_262144B_us"),
+    ("fused", "grad_rs_fused_16777216B_us"),
+    ("fused", "grad_rs_unfused_16777216B_us"),
+]
+
+
+def _rows(path: pathlib.Path) -> dict[tuple[str, str], float]:
+    doc = json.loads(path.read_text())
+    return {(r["bench"], r["name"]): float(r["measured_us"])
+            for r in doc.get("rows", [])}
+
+
+def check(baseline: pathlib.Path, current: pathlib.Path,
+          threshold: float = 1.25, min_us: float = 20.0) -> int:
+    base = _rows(baseline)
+    cur = _rows(current)
+    compared = regressed = 0
+    print(f"perf gate: {current} vs baseline {baseline} "
+          f"(fail > x{threshold:.2f})")
+    print("bench,name,baseline_us,current_us,ratio,verdict")
+    for pin in PINS:
+        b = base.get(pin)
+        c = cur.get(pin)
+        if b is None or c is None:
+            where = "baseline" if b is None else "current"
+            print(f"{pin[0]},{pin[1]},-,-,-,SKIP(missing in {where})")
+            continue
+        if not (math.isfinite(b) and math.isfinite(c)) or b < min_us:
+            print(f"{pin[0]},{pin[1]},{b:.2f},{c:.2f},-,"
+                  f"SKIP(below {min_us:.0f}us floor)")
+            continue
+        ratio = c / b
+        compared += 1
+        verdict = "OK" if ratio <= threshold else "REGRESSED"
+        regressed += verdict == "REGRESSED"
+        print(f"{pin[0]},{pin[1]},{b:.2f},{c:.2f},x{ratio:.2f},{verdict}")
+    if compared == 0:
+        print("perf gate: no pinned grid point present in both documents")
+        return 2
+    if regressed:
+        print(f"perf gate: {regressed}/{compared} pinned points regressed "
+              f"beyond x{threshold:.2f}")
+        return 1
+    print(f"perf gate: {compared} pinned points within x{threshold:.2f}")
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json to gate against")
+    ap.add_argument("--current", required=True,
+                    help="fresh benchmarks.run --json output")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when current > threshold * baseline")
+    ap.add_argument("--min-us", type=float, default=20.0,
+                    help="skip rows whose baseline is below this (noise)")
+    args = ap.parse_args(argv)
+    rc = check(pathlib.Path(args.baseline), pathlib.Path(args.current),
+               args.threshold, args.min_us)
+    sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

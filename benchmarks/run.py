@@ -82,6 +82,9 @@ BENCHES = [
         "measured-performance autotuner: sweep + tuned-selector checks")),
     ("substrate", False, _module_runner(
         "bench_substrate", "substrate A/B (ARL shmem vs XLA 'eLib')")),
+    ("fused", False, _module_runner(
+        "bench_fused",
+        "fused comm-compute: ring attention + RS->AdamW (bytes + time)")),
 ]
 
 

@@ -147,6 +147,24 @@ def modeled_pipelined_time(stages: list[tuple], n_chunks: int,
     return sum(per) + (n_chunks - 1) * max(per)
 
 
+def modeled_overlapped_time(stages: list[tuple], compute_s: float,
+                            link: LinkModel = ICI_V5E) -> float:
+    """Comm-compute overlapped schedule time (DESIGN.md §14).
+
+    Each stage's transfer is issued non-blocking (`put_nbi`) while one
+    compute block of `compute_s` seconds consumes the previously arrived
+    payload — the fusion layer's double-buffer discipline.  With S stages
+    there are S+1 compute blocks (the local block needs no transfer); a
+    stage only extends the critical path by the part of its wire time the
+    concurrent compute block fails to hide:
+
+        T = (S + 1) * compute_s  +  sum_k max(0, t_k - compute_s)
+    """
+    t_comm = [link.time(*_stage3(st)) for st in stages]
+    return ((len(stages) + 1) * compute_s
+            + sum(max(0.0, t - compute_s) for t in t_comm))
+
+
 def fit_contention(link_loads, times_s) -> float:
     """Recover the LinkModel `contention` factor from measurements of the
     SAME transfer at different hot-link multiplicities: least-squares fit

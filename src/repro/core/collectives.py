@@ -1413,12 +1413,18 @@ def reduce_scatter(net: NetOps, x, op: str = "sum",
     return _reduce_scatter_ring(net, x, fn, team=team)
 
 
-def _reduce_scatter_ring(net: NetOps, x, fn, team=None):
-    """Ring reduce-scatter with the static schedule (§Perf P1): one
-    pre-rotation puts every stage's chunk at a STATIC offset, so the loop
-    body is free of dynamic slicing (r block t = chunk (rank + t) mod n).
-    `rank` is the group rank of the `team` view (the PE id for the
-    world); non-members of a proper-subset team get a zero chunk."""
+def _reduce_scatter_parts(net: NetOps, x, fn, team=None):
+    """The ring reduce-scatter of `_reduce_scatter_ring` with the FINAL
+    combine left undone: runs all n-1 ring stages but returns the last
+    stage's two operands separately instead of `fn`-combining them, so a
+    fused consumer (core/fusion.fused_rs_adam) can land that combine
+    inside its own kernel (DESIGN.md §14).
+
+    Returns ``(local_last, incoming, info, mask)``: the owned chunk is
+    ``fn(local_last, incoming)`` (``incoming`` is None when n == 1 and
+    ``local_last`` is already final).  `info`/`mask` as in
+    `_reduce_scatter_ring`; callers must apply `_mask_out(net, mask, ...)`
+    to whatever they derive from the chunk."""
     rank, n, lift, mask = _team_view(net, team)
     sim = isinstance(net, SimNetOps)
     orig_shape = x.shape[1:] if sim else x.shape
@@ -1439,14 +1445,29 @@ def _reduce_scatter_ring(net: NetOps, x, fn, team=None):
         return b[..., t * chunk:(t + 1) * chunk] if sim \
             else b[t * chunk:(t + 1) * chunk]
 
-    cur = static_chunk(r, 0)                     # chunk[rank]
-    sched = reduce_scatter_schedule(n, _payload_bytes(net, x))
-    for j, st in enumerate(sched.stages, start=1):
-        cur = net.ppermute(cur, lift(st.pattern))
-        cur = fn(static_chunk(r, n - j), cur)    # chunk[(rank - j) mod n]
-    # rank p now owns the fully-reduced chunk (p + 1) % n
+    # rank p ends up owning the fully-reduced chunk (p + 1) % n
     own_idx = (rank + 1) % n
     info = (orig_shape, size, chunk, own_idx)
+    cur = static_chunk(r, 0)                     # chunk[rank]
+    if n == 1:
+        return cur, None, info, mask
+    sched = reduce_scatter_schedule(n, _payload_bytes(net, x))
+    for j, st in enumerate(sched.stages[:-1], start=1):
+        cur = net.ppermute(cur, lift(st.pattern))
+        cur = fn(static_chunk(r, n - j), cur)    # chunk[(rank - j) mod n]
+    incoming = net.ppermute(cur, lift(sched.stages[-1].pattern))
+    return static_chunk(r, 1), incoming, info, mask
+
+
+def _reduce_scatter_ring(net: NetOps, x, fn, team=None):
+    """Ring reduce-scatter with the static schedule (§Perf P1): one
+    pre-rotation puts every stage's chunk at a STATIC offset, so the loop
+    body is free of dynamic slicing (r block t = chunk (rank + t) mod n).
+    `rank` is the group rank of the `team` view (the PE id for the
+    world); non-members of a proper-subset team get a zero chunk."""
+    local, incoming, info, mask = _reduce_scatter_parts(net, x, fn,
+                                                        team=team)
+    cur = local if incoming is None else fn(local, incoming)
     return _mask_out(net, mask, cur), info
 
 

@@ -1,0 +1,150 @@
+"""k-ary combine + AdamW update — the terminal stage of the fused
+reduce-scatter→optimizer path (DESIGN.md §14).
+
+`reduce_combine.py` fuses the per-stage `local = op(local, received)` of a
+ring reduction.  This module extends that combine through the *last* ring
+stage: the final received chunk is summed with the local partial, divided
+by the mean scale, and fed straight into the AdamW moment/param update —
+one kernel pass, so the fully-reduced gradient chunk never round-trips
+through memory before the optimizer consumes it (and the full gradient is
+never materialized anywhere: each PE only ever updates its owned 1/N
+chunk).
+
+The arithmetic is kept operation-for-operation identical to
+`train/optimizer.py::apply_updates` (f32 moments) so the fused path is
+BITWISE equal to grad-allreduce-then-adam_update, not merely close:
+elementwise IEEE ops in the same order are deterministic.  Weight decay
+applies per element via a mask (1 where the element belongs to a >=2-D
+leaf) because chunk boundaries do not respect leaf boundaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .reduce_combine import BLOCK_COLS, BLOCK_ROWS, _OPS
+
+
+def combine_chunks(bufs, op: str = "sum", *, use_pallas: bool = True,
+                   interpret: bool | None = None):
+    """k-ary elementwise combine of same-shape chunks (any dtype, incl.
+    int) — the fused path's reduction stage, exposed standalone so the
+    combine arithmetic is testable bit-for-bit against the unfused ring
+    on integer payloads where rounding can't hide reordering."""
+    bufs = list(bufs)
+    if len(bufs) == 1:
+        return bufs[0]
+    from . import ops as _ops           # late: ops imports this module
+    return _ops.reduce_combine(bufs, op, use_pallas=use_pallas,
+                               interpret=interpret)
+
+
+def _fused_kernel(*refs, ng: int, lr: float, b1: float, b2: float,
+                  eps: float, wd_coef: float, scale: float):
+    g_refs = refs[:ng]
+    p_ref, m_ref, v_ref, wd_ref, h_ref = refs[ng:ng + 5]
+    po_ref, mo_ref, vo_ref = refs[ng + 5:]
+    g = g_refs[0][...]
+    for r in g_refs[1:]:
+        g = g + r[...]
+    g = g / scale
+    c1 = h_ref[...][0, 0]
+    c2 = h_ref[...][0, 1]
+    p = p_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+    upd = jnp.where(wd_ref[...] != 0, upd + wd_coef * p, upd)
+    po_ref[...] = (p - lr * upd).astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def _to_blocked(x, br, bc):
+    pad = (-x.size) % (br * bc)
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x.reshape(-1, bc)
+
+
+def fused_adam_update_2d(g_bufs, p, m, v, wd_mask, c1, c2, *, lr: float,
+                         b1: float, b2: float, eps: float, wd_coef: float,
+                         scale: float, out_dtype,
+                         block_rows: int = BLOCK_ROWS,
+                         block_cols: int = BLOCK_COLS,
+                         interpret: bool = False):
+    """Pallas kernel: combine k gradient chunks, mean-scale, AdamW-update
+    the param/moment chunks.  All operands 1-D f32 of equal length except
+    wd_mask (int8).  c1/c2 are the traced bias-correction scalars
+    1 - beta**t.  Returns (new_p[out_dtype], new_m, new_v) 1-D."""
+    n = p.size
+    br, bc = block_rows, block_cols
+    gs = [_to_blocked(g, br, bc) for g in g_bufs]
+    p2 = _to_blocked(p, br, bc)
+    m2 = _to_blocked(m, br, bc)
+    v2 = _to_blocked(v, br, bc)
+    w2 = _to_blocked(wd_mask.astype(jnp.int8), br, bc)
+    hyper = jnp.stack([c1, c2]).astype(jnp.float32).reshape(1, 2)
+    rows, cols = p2.shape
+    grid = (rows // br, cols // bc)
+    spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    hspec = pl.BlockSpec((1, 2), lambda i, j: (0, 0))
+    kernel = functools.partial(
+        _fused_kernel, ng=len(gs), lr=lr, b1=b1, b2=b2, eps=eps,
+        wd_coef=wd_coef, scale=scale)
+    new_p, new_m, new_v = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * (len(gs) + 4) + [hspec],
+        out_specs=(spec, spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, cols), out_dtype),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        ),
+        interpret=interpret,
+    )(*gs, p2, m2, v2, w2, hyper)
+    return (new_p.reshape(-1)[:n], new_m.reshape(-1)[:n],
+            new_v.reshape(-1)[:n])
+
+
+def _fused_ref(g_bufs, p, m, v, wd_mask, c1, c2, *, lr, b1, b2, eps,
+               wd_coef, scale, out_dtype):
+    """XLA path — the exact op sequence of the kernel (and of
+    optimizer.apply_updates), elementwise on the flat chunks."""
+    g = g_bufs[0]
+    for r in g_bufs[1:]:
+        g = g + r
+    g = g / scale
+    m_n = b1 * m + (1.0 - b1) * g
+    v_n = b2 * v + (1.0 - b2) * g * g
+    upd = (m_n / c1) / (jnp.sqrt(v_n / c2) + eps)
+    upd = jnp.where(wd_mask != 0, upd + wd_coef * p, upd)
+    return (p - lr * upd).astype(out_dtype), m_n, v_n
+
+
+def fused_adam_update(g_bufs, p, m, v, wd_mask, c1, c2, *, lr: float,
+                      b1: float, b2: float, eps: float, wd_coef: float,
+                      scale: float = 1.0, out_dtype=None,
+                      use_pallas: bool = False,
+                      interpret: bool | None = None):
+    """Public entry: combine + mean + AdamW on flat f32 chunks.
+
+    g_bufs: list of 1-D f32 gradient partials to sum (the local ring
+    partial and the final incoming chunk); p/m/v: f32 param and moment
+    chunks; wd_mask: nonzero where weight decay applies; c1/c2: traced
+    1 - beta**t scalars.  Static floats lr/b1/b2/eps/wd_coef/scale come
+    from AdamWConfig and the mesh.  Returns (new_p, new_m, new_v)."""
+    out_dtype = p.dtype if out_dtype is None else out_dtype
+    kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, wd_coef=wd_coef, scale=scale,
+              out_dtype=out_dtype)
+    if not use_pallas:
+        return _fused_ref(list(g_bufs), p, m, v, wd_mask, c1, c2, **kw)
+    from . import ops as _ops
+    interpret = (_ops._default_interpret() if interpret is None
+                 else interpret)
+    return fused_adam_update_2d(list(g_bufs), p, m, v, wd_mask, c1, c2,
+                                interpret=interpret, **kw)

@@ -28,6 +28,32 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Edge-padding plan + jitted-executor cache, per (kernel, shapes, dtype,
+# block, interpret) — the gather_arrays_device pattern from PR 4: pad
+# shapes were being recomputed and the pallas wrapper re-traced on EVERY
+# eager call.  One cached jax.jit closure per key makes the hot path
+# re-trace-free (XLA's trace cache keys on the function object, so the
+# closure must be the same object across calls).  _PLAN_STATS is test
+# observability (tests/test_fused.py asserts the hot path hits).
+_EXEC_CACHE: dict = {}
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def _cached_exec(key, build):
+    fn = _EXEC_CACHE.get(key)
+    if fn is None:
+        _PLAN_STATS["misses"] += 1
+        fn = _EXEC_CACHE[key] = build()
+    else:
+        _PLAN_STATS["hits"] += 1
+    return fn
+
+
+def _clear_exec_cache():
+    _EXEC_CACHE.clear()
+    _PLAN_STATS["hits"] = _PLAN_STATS["misses"] = 0
+
+
 def _pad2d(x, br, bc):
     r, c = x.shape
     pr = (-r) % br
@@ -42,10 +68,18 @@ def put_copy(src, *, use_pallas: bool = True, interpret: bool | None = None):
     if not use_pallas:
         return ref.put_copy_ref(src)
     interpret = _default_interpret() if interpret is None else interpret
-    x2 = src.reshape(-1, src.shape[-1]) if src.ndim != 2 else src
-    padded, (r, c) = _pad2d(x2, _pc.BLOCK_ROWS, _pc.BLOCK_COLS)
-    out = _pc.put_copy_2d(padded, interpret=interpret)[:r, :c]
-    return out.reshape(src.shape)
+    key = ("put_copy", src.shape, jnp.dtype(src.dtype).name, interpret)
+
+    def build():
+        @jax.jit
+        def run(x):
+            x2 = x.reshape(-1, x.shape[-1]) if x.ndim != 2 else x
+            padded, (r, c) = _pad2d(x2, _pc.BLOCK_ROWS, _pc.BLOCK_COLS)
+            out = _pc.put_copy_2d(padded, interpret=interpret)[:r, :c]
+            return out.reshape(x.shape)
+        return run
+
+    return _cached_exec(key, build)(src)
 
 
 def dma_copy(src, dst, *, src_origin, dst_origin, region,
@@ -65,13 +99,24 @@ def reduce_combine(bufs, op: str = "sum", *, use_pallas: bool = True,
         return ref.reduce_combine_ref(bufs, op)
     interpret = _default_interpret() if interpret is None else interpret
     shape = bufs[0].shape
-    flat = [b.reshape(-1, b.shape[-1]) if b.ndim != 2 else b for b in bufs]
-    padded = []
-    for f in flat:
-        p, (r, c) = _pad2d(f, _rc.BLOCK_ROWS, _rc.BLOCK_COLS)
-        padded.append(p)
-    out = _rc.reduce_combine_2d(padded, op, interpret=interpret)[:r, :c]
-    return out.reshape(shape)
+    key = ("reduce_combine", len(bufs), op, shape,
+           jnp.dtype(bufs[0].dtype).name, interpret)
+
+    def build():
+        @jax.jit
+        def run(*bs):
+            flat = [b.reshape(-1, b.shape[-1]) if b.ndim != 2 else b
+                    for b in bs]
+            padded = []
+            for f in flat:
+                p, (r, c) = _pad2d(f, _rc.BLOCK_ROWS, _rc.BLOCK_COLS)
+                padded.append(p)
+            out = _rc.reduce_combine_2d(padded, op,
+                                        interpret=interpret)[:r, :c]
+            return out.reshape(shape)
+        return run
+
+    return _cached_exec(key, build)(*bufs)
 
 
 # ---------------------------------------------------------------------------

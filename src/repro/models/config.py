@@ -85,6 +85,11 @@ class ModelConfig:
                                        # largest archs; optimizer math
                                        # always runs f32)
     use_pallas: bool = False
+    attention: str = "mono"      # mono | ring: "ring" runs sequence-sharded
+                                 # attention as the fused comm-compute ring
+                                 # (core/fusion.ring_attention) when inputs
+                                 # are sequence-sharded over `data` on the
+                                 # shmem backend (DESIGN.md §14)
     remat: str = "full"          # none | full
     logit_dtype: Any = jnp.float32
     fsdp: bool = False           # ZeRO-3: 2D block weights sharded over data

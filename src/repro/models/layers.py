@@ -220,11 +220,29 @@ def attention(comm: Comm, cfg: ModelConfig, p: Params, x, positions, *,
     window = cfg.window
     if cfg.local_global_period is not None and is_local_layer:
         window = cfg.local_window
-    o = kops.attention(
-        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window,
-        softcap=cfg.softcap, use_pallas=cfg.use_pallas,
-        blockwise_unroll=cfg.probe_unroll)
+    seq_shards = (comm.axis_size(comm.axes.data)
+                  if cfg.attention == "ring" and comm.backend == "shmem"
+                  else 1)
+    if seq_shards > 1:
+        # attention="ring" (DESIGN.md §14): the caller sequence-sharded
+        # x over `data` (long-context; `positions` are GLOBAL), so each
+        # PE attends its query shard against the KV ring — each rotation
+        # a put_nbi hidden behind the previous block's flash partials.
+        # Head/TP layout and the wo allreduce are untouched.
+        from ..core import fusion, shmem
+        sctx = shmem.spmd_ctx(comm.axes.data)
+        pos1 = positions[0].astype(jnp.int32)        # shared across batch
+        o = fusion.ring_attention(
+            sctx, q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), pos1, pos1, causal=cfg.causal,
+            window=window, softcap=cfg.softcap, use_pallas=cfg.use_pallas,
+            out_dtype=q.dtype)
+    else:
+        o = kops.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=cfg.causal, window=window,
+            softcap=cfg.softcap, use_pallas=cfg.use_pallas,
+            blockwise_unroll=cfg.probe_unroll)
     o = o.transpose(0, 2, 1, 3)
     if cfg.n_heads % tp:   # zero ghost heads (padded head count)
         _, valid = _head_ids(comm, cfg, tp)

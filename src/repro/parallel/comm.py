@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import collectives as coll
+from ..core import fusion as fusion_mod
 from ..core import team as team_mod
 from ..core.netops import SpmdNetOps
 from ..core.topology import MeshTopology
@@ -356,3 +357,50 @@ class Comm:
         if mean:
             out = [b / scale_n for b in out]
         return out
+
+    def grad_sync_fused_update(self, g_bufs, p_bufs, moments, wd_masks,
+                               c1, c2, *, lr: float, b1: float, b2: float,
+                               eps: float, wd_coef: float, out_dtypes,
+                               mean: bool = True):
+        """grad_rs="fused" (DESIGN.md §14): the bucketed ring
+        reduce-scatter of `grad_sync_bucketed` with the final combine of
+        every bucket landing inside the k-ary combine+AdamW kernel
+        (core/fusion.fused_rs_adam) — the full gradient is never
+        materialized, and the allgather ships the UPDATED PARAM chunk at
+        param dtype instead of the f32 gradient.
+
+        g_bufs/p_bufs: flat f32 gradient and param buckets (matching
+        heap PackSpecs); moments: per-bucket {"m", "v"} OWNED chunks,
+        shape (ceil(total/n),); wd_masks: per-bucket int8 weight-decay
+        element masks; c1/c2: traced 1-beta**t scalars; out_dtypes: the
+        per-bucket param dtype the allgather ships.  Two-phase issue like
+        grad_sync_bucketed: every bucket's RS+update first, then the
+        allgathers drain.  Returns (updated full param buckets, updated
+        moment chunks).  Bitwise equal to
+        grad_sync_bucketed-then-apply_updates (f32 moments); no pod axis
+        (a pre-reduce over DCN would reorder the summation)."""
+        axes = self.axes
+        assert self.backend == "shmem", "fused grad sync is shmem-only"
+        assert axes.pod is None, \
+            "grad_rs='fused' does not support a pod axis"
+        scale_n = 1
+        for a in axes.grad_axes():
+            scale_n *= self.axis_size(a)
+        net = self._net(axes.data)
+        emb = self._embedding_for(net)
+        emb_team = coll.embedding_team(emb, self._topo_for(net),
+                                       net.n_pes, self.link)
+        prof = self._prof()
+        scale = float(scale_n) if mean else 1.0
+        # phase 1: every bucket's reduce-scatter + fused optimizer update
+        parts = [fusion_mod.fused_rs_adam(
+                     net, g, p, mv["m"], mv["v"], w, c1, c2, lr=lr, b1=b1,
+                     b2=b2, eps=eps, wd_coef=wd_coef, scale=scale,
+                     out_dtype=dt, team=emb_team, profile=prof)
+                 for g, p, mv, w, dt in zip(g_bufs, p_bufs, moments,
+                                            wd_masks, out_dtypes)]
+        # phase 2: allgathers of the updated param chunks drain together
+        outs = [coll.allgather_unpad(net, pc, info, team=emb_team)
+                for pc, _, _, info in parts]
+        new_moments = [{"m": m, "v": v} for _, m, v, _ in parts]
+        return outs, new_moments

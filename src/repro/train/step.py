@@ -44,6 +44,105 @@ BUCKET_BYTES = 64 * 1024 * 1024   # fusion bucket size (f32 elements)
 GRAD_RS_AUTO_BYTES = 8 * 1024 * 1024
 
 
+def plan_fused_buckets(leaves, bucket_bytes: int = BUCKET_BYTES):
+    """Greedy bucketing of param/grad leaves for the fused RS+Adam path:
+    the same `bucket_bytes` budget as fused_grad_sync, additionally split
+    at dtype changes — the fused allgather ships each bucket's UPDATED
+    params at their own dtype, so a bucket must be dtype-uniform.
+    Returns a list of leaf-index lists (deterministic: the optimizer
+    state init and the step must agree on the plan)."""
+    budget = bucket_bytes // 4
+    buckets, cur, cur_n = [], [], 0
+    for i, l in enumerate(leaves):
+        if cur and (cur_n + l.size > budget
+                    or l.dtype != leaves[cur[0]].dtype):
+            buckets.append(cur)
+            cur, cur_n = [], 0
+        cur.append(i)
+        cur_n += l.size
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def _wd_mask(spec, leaves):
+    """int8 weight-decay element mask over a packed bucket: 1 where the
+    element belongs to a >=2-D leaf (AdamW decays only those), 0 on 1-D
+    leaves and the alignment gaps between leaves.  Static per plan."""
+    mask = np.zeros(spec.total, np.int8)
+    for leaf, off, shape in zip(leaves, spec.offsets, spec.shapes):
+        if leaf.ndim >= 2:
+            mask[off:off + int(np.prod(shape))] = 1
+    return jnp.asarray(mask)
+
+
+def init_fused_opt_state(params, n_data: int,
+                         bucket_bytes: int = BUCKET_BYTES):
+    """Optimizer state for grad_rs="fused": per bucket, this PE's OWNED
+    moment chunks — shape (ceil(bucket_total/n_data),) — instead of
+    full-tree moments.  Zero-initialized, so the same arrays are valid on
+    every PE at step 0; after the first step each PE's chunks track only
+    its owned 1/N of each bucket (they never ride the ring)."""
+    leaves = jax.tree.leaves(params)
+    state = []
+    for idxs in plan_fused_buckets(leaves, bucket_bytes):
+        spec = heap.plan_pack([leaves[i] for i in idxs], dtype=jnp.float32)
+        chunk = -(-spec.total // n_data)
+        state.append({"m": jnp.zeros((chunk,), jnp.float32),
+                      "v": jnp.zeros((chunk,), jnp.float32)})
+    return {"fused": state, "step": jnp.zeros((), jnp.int32)}
+
+
+def fused_adam_sync(comm: Comm, params, grads, opt_state,
+                    adamw: opt.AdamWConfig, sync_mask, *,
+                    bucket_bytes: int = BUCKET_BYTES):
+    """The fused gradient-sync + optimizer step (DESIGN.md §14): packs
+    params and grads onto matching flat f32 buckets and runs
+    Comm.grad_sync_fused_update — ring reduce-scatter with the final
+    combine landing inside the combine+AdamW kernel, then an allgather of
+    the updated params at param dtype.  Replaces BOTH fused_grad_sync and
+    opt.apply_updates; bitwise equal to that composition (f32 moments).
+
+    opt_state comes from init_fused_opt_state.  Every leaf must be
+    data-replicated (fsdp/EP pre-reduced leaves have no full-bucket
+    gradient to scatter) and moments must be f32 (the kernel's identity
+    contract)."""
+    assert adamw.moment_dtype == "f32", \
+        "grad_rs='fused' requires f32 moments (bitwise kernel contract)"
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    mask = treedef.flatten_up_to(sync_mask)
+    assert all(mask), \
+        "grad_rs='fused' requires every param data-replicated"
+    step_c = opt_state["step"] + 1
+    t = step_c.astype(jnp.float32)
+    c1 = 1.0 - adamw.b1 ** t
+    c2 = 1.0 - adamw.b2 ** t
+    buckets = plan_fused_buckets(leaves_p, bucket_bytes)
+    g_bufs, p_bufs, wd_masks, out_dtypes, out_specs = [], [], [], [], []
+    for idxs in buckets:
+        pb = [leaves_p[i] for i in idxs]
+        gb = [leaves_g[i] for i in idxs]
+        spec32 = heap.plan_pack(pb, dtype=jnp.float32)
+        g_bufs.append(heap.pack(gb, spec32))
+        p_bufs.append(heap.pack(pb, spec32))
+        wd_masks.append(_wd_mask(spec32, pb))
+        out_dtypes.append(pb[0].dtype)
+        # same shapes -> same element offsets: the param-dtype spec the
+        # updated bucket unpacks with
+        out_specs.append(heap.plan_pack(pb, dtype=pb[0].dtype))
+    outs, new_moments = comm.grad_sync_fused_update(
+        g_bufs, p_bufs, opt_state["fused"], wd_masks, c1, c2,
+        lr=adamw.lr, b1=adamw.b1, b2=adamw.b2, eps=adamw.eps,
+        wd_coef=adamw.weight_decay, out_dtypes=out_dtypes, mean=True)
+    new_leaves = list(leaves_p)
+    for idxs, out, spec in zip(buckets, outs, out_specs):
+        for i, val in zip(idxs, heap.unpack(out, spec)):
+            new_leaves[i] = val
+    new_params = treedef.unflatten(new_leaves)
+    return new_params, {"fused": new_moments, "step": step_c}
+
+
 def fused_grad_sync(comm: Comm, grads, sync_mask, *, fuse: bool = True,
                     bucket_bytes: int = BUCKET_BYTES):
     """Mean-reduce grads over (pod x) data.  sync_mask marks leaves that
@@ -100,7 +199,11 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
     grad_rs: True forces the bucketed reduce-scatter + allgather gradient
     sync, False the single-shot allreduce, "auto" switches on it when the
     data-replicated gradient payload exceeds GRAD_RS_AUTO_BYTES (large
-    models).  pipeline_chunks threads the chunked-schedule knob (int /
+    models).  "fused" (shmem only) fuses the sync INTO the optimizer:
+    ring reduce-scatter whose final combine lands inside the
+    combine+AdamW kernel, then a param-dtype allgather of the updated
+    params (DESIGN.md §14) — opt_state must come from
+    init_fused_opt_state, every param data-replicated, f32 moments.  pipeline_chunks threads the chunked-schedule knob (int /
     "auto" / None) to every shmem allreduce in the step.  topo/link give
     the cost model the mesh to price against; with a 2D+ topo and
     allreduce_algo="auto", bucket syncs may take the hierarchical
@@ -159,9 +262,16 @@ def build_train_step(cfg: ModelConfig, axes: AxisSpec, backend: str,
         shapes = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
         mask = sharding.needs_data_sync(cfg, shapes)
-        grads = fused_grad_sync(comm, grads, mask, fuse=fuse_grads)
         for a in axes.grad_axes():
             loss = comm.allreduce(loss, a) / comm.axis_size(a)
+        if rs == "fused" and backend == "shmem":
+            # the sync IS the optimizer step (DESIGN.md §14): ring RS with
+            # the final combine inside the AdamW kernel, params
+            # allgathered updated; opt_state from init_fused_opt_state
+            new_params, new_state = fused_adam_sync(
+                comm, params, grads, opt_state, adamw, mask)
+            return loss, new_params, new_state
+        grads = fused_grad_sync(comm, grads, mask, fuse=fuse_grads)
 
         new_params, new_state = opt.apply_updates(params, grads, opt_state,
                                                   adamw)

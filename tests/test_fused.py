@@ -1,0 +1,386 @@
+"""Fused comm-compute paths (DESIGN.md §14): ring attention vs monolithic
+flash, fused reduce-scatter->AdamW vs the unfused composition (bitwise),
+the k-ary combine stage on int payloads, pricing/tuner wiring, and the
+ops-layer pad-plan/executor cache being re-trace-free."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collectives as coll
+from repro.core import fusion, shmem
+from repro.core.netops import SimNetOps
+from repro.kernels import fused_update as fu
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# ring attention (SIM): allclose-f32 vs monolithic flash
+# ---------------------------------------------------------------------------
+
+def _shard_seq(x, n):
+    """(B, H, L, D) -> (n, B, H, L/n, D): PE p holds rows [p*L/n, ...)."""
+    B, H, L, D = x.shape
+    return x.reshape(B, H, n, L // n, D).transpose(2, 0, 1, 3, 4)
+
+
+def _unshard_seq(x):
+    n, B, H, Ls, D = x.shape
+    return x.transpose(1, 2, 0, 3, 4).reshape(B, H, n * Ls, D)
+
+
+@pytest.mark.parametrize("causal,window,hkv,use_pallas", [
+    (True, None, 4, False),          # dense causal
+    (False, None, 4, False),         # bidirectional
+    (True, 10, 2, False),            # sliding window + GQA
+    (True, None, 2, True),           # GQA through the pallas partials
+    (True, 6, 4, True),              # window through the pallas partials
+])
+def test_ring_attention_matches_mono(causal, window, hkv, use_pallas):
+    n, B, Hq, L, D = 4, 2, 4, 32, 16
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((B, Hq, L, D)).astype(np.float32)
+    k = rng.standard_normal((B, hkv, L, D)).astype(np.float32)
+    v = rng.standard_normal((B, hkv, L, D)).astype(np.float32)
+    ref = kops.attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                         causal=causal, window=window, use_pallas=False)
+    ctx = shmem.sim_ctx(n)
+    pos = jnp.arange(L, dtype=jnp.int32).reshape(n, L // n)
+    out = fusion.ring_attention(
+        ctx, _shard_seq(jnp.asarray(q), n), _shard_seq(jnp.asarray(k), n),
+        _shard_seq(jnp.asarray(v), n), pos, pos, causal=causal,
+        window=window, use_pallas=use_pallas, bq=8, bk=8)
+    err = np.abs(_unshard_seq(np.asarray(out)) - np.asarray(ref)).max()
+    assert err < 2e-5, err
+
+
+def test_ring_attention_n1_is_mono():
+    B, H, L, D = 1, 2, 16, 8
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((B, H, L, D)).astype(np.float32))
+    ref = kops.attention(q, q, q, causal=True, use_pallas=False)
+    ctx = shmem.sim_ctx(1)
+    pos = jnp.arange(L, dtype=jnp.int32)[None]
+    out = fusion.ring_attention(ctx, q[None], q[None], q[None], pos, pos,
+                                causal=True)
+    assert np.abs(np.asarray(out[0]) - np.asarray(ref)).max() < 2e-5
+
+
+# ---------------------------------------------------------------------------
+# fused reduce-scatter -> AdamW (SIM): bitwise vs the unfused composition
+# ---------------------------------------------------------------------------
+
+_HP = dict(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd_coef=0.1)
+
+
+def _fused_fn(net, n, total, wd, out_dtype=None, use_pallas=False):
+    chunk = -(-total // n)
+
+    def fused(g, p, m, v):
+        t = jnp.asarray(1.0, jnp.float32)
+        c1 = 1.0 - _HP["b1"] ** t
+        c2 = 1.0 - _HP["b2"] ** t
+        new_p, new_m, new_v, info = fusion.fused_rs_adam(
+            net, g, p, m, v, wd, c1, c2, scale=float(n),
+            out_dtype=out_dtype, use_pallas=use_pallas, **_HP)
+        full = coll.allgather_unpad(net, new_p, info)
+        return full, new_m, new_v
+
+    return fused, chunk
+
+
+def _unfused_fn(net, n, wd):
+    def unfused(g, p, m, v):
+        t = jnp.asarray(1.0, jnp.float32)
+        c1 = 1.0 - _HP["b1"] ** t
+        c2 = 1.0 - _HP["b2"] ** t
+        own, info = coll.reduce_scatter(net, g)
+        gm = coll.allgather_unpad(net, own, info) / float(n)
+        m = _HP["b1"] * m + (1.0 - _HP["b1"]) * gm
+        v = _HP["b2"] * v + (1.0 - _HP["b2"]) * gm * gm
+        upd = (m / c1) / (jnp.sqrt(v / c2) + _HP["eps"])
+        upd = jnp.where(wd != 0, upd + _HP["wd_coef"] * p, upd)
+        return p - _HP["lr"] * upd, m, v
+
+    return unfused
+
+
+@pytest.mark.parametrize("total", [1000, 1003])   # even / ragged chunking
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_fused_rs_adam_bitwise(total, use_pallas):
+    """jit(fused) == jit(unfused RS+AG+Adam) BITWISE for f32 — both sides
+    under jit so XLA's FMA contraction applies to both (the kernel doc's
+    identity contract)."""
+    n = 4
+    net = SimNetOps(n)
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((n, total)).astype(np.float32))
+    p = jnp.asarray(np.broadcast_to(
+        rng.standard_normal(total).astype(np.float32), (n, total)).copy())
+    wd = jnp.asarray((np.arange(total) < total // 2).astype(np.int8))
+    fused, chunk = _fused_fn(net, n, total, wd, use_pallas=use_pallas)
+    unfused = _unfused_fn(net, n, wd)
+    m0 = jnp.zeros((n, chunk), jnp.float32)
+    v0 = jnp.zeros((n, chunk), jnp.float32)
+    mf0 = jnp.zeros((n, total), jnp.float32)
+    vf0 = jnp.zeros((n, total), jnp.float32)
+    pf, mf_c, vf_c = jax.jit(fused)(g, p, m0, v0)
+    pu, mu, vu = jax.jit(unfused)(g, p, mf0, vf0)
+    np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))
+    # every PE left with the identical updated bucket
+    assert all(np.array_equal(np.asarray(pf[0]), np.asarray(pf[r]))
+               for r in range(n))
+    # owned moment chunks == the matching slices of the full moments
+    padded = chunk * n
+    mu_pad = np.pad(np.asarray(mu), ((0, 0), (0, padded - total)))
+    vu_pad = np.pad(np.asarray(vu), ((0, 0), (0, padded - total)))
+    for r in range(n):
+        own = (r + 1) % n
+        sl = slice(own * chunk, (own + 1) * chunk)
+        valid = min(chunk, max(0, total - own * chunk))
+        np.testing.assert_array_equal(np.asarray(mf_c[r])[:valid],
+                                      mu_pad[r, sl][:valid])
+        np.testing.assert_array_equal(np.asarray(vf_c[r])[:valid],
+                                      vu_pad[r, sl][:valid])
+
+
+def test_fused_rs_adam_bf16_out_is_cast():
+    n, total = 4, 256
+    net = SimNetOps(n)
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.standard_normal((n, total)).astype(np.float32))
+    p = jnp.asarray(np.broadcast_to(
+        rng.standard_normal(total).astype(np.float32), (n, total)).copy())
+    wd = jnp.asarray(np.ones(total, np.int8))
+    f32_fn, chunk = _fused_fn(net, n, total, wd)
+    bf_fn, _ = _fused_fn(net, n, total, wd, out_dtype=jnp.bfloat16)
+    m0 = jnp.zeros((n, chunk), jnp.float32)
+    v0 = jnp.zeros((n, chunk), jnp.float32)
+    pf, _, _ = jax.jit(f32_fn)(g, p, m0, v0)
+    pb, _, _ = jax.jit(bf_fn)(g, p, m0, v0)
+    assert pb.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(pb, np.float32),
+                                  np.asarray(pf.astype(jnp.bfloat16),
+                                             np.float32))
+
+
+# ---------------------------------------------------------------------------
+# k-ary combine stage: int payloads, pallas vs jnp bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_combine_chunks_matches_jnp(op, dtype):
+    rng = np.random.default_rng(7)
+    bufs = [jnp.asarray(rng.integers(-50, 50, size=(3, 40)).astype(dtype))
+            for _ in range(3)]
+    got = fu.combine_chunks(bufs, op, use_pallas=True, interpret=True)
+    want = fu.combine_chunks(bufs, op, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if op == "sum":
+        np.testing.assert_array_equal(
+            np.asarray(want), np.asarray(bufs[0] + bufs[1] + bufs[2]))
+
+
+# ---------------------------------------------------------------------------
+# pricing + tuner wiring
+# ---------------------------------------------------------------------------
+
+class _StubTuner:
+    def __init__(self, verdict):
+        self.verdict = verdict
+        self.calls = []
+
+    def algorithm(self, collective, n, nbytes, topo=None, candidates=None,
+                  team=None):
+        self.calls.append((collective, n, nbytes, candidates))
+        return self.verdict
+
+
+def test_choose_attention_overlap_wins_when_compute_hides_comm():
+    # heavy per-block compute: ring hides every rotation -> ring wins
+    name, times = fusion.choose_attention(8, 1 << 20, 1.0)
+    assert name == "ring" and times["ring"] < times["mono"]
+    # n=1: nothing to rotate
+    assert fusion.choose_attention(1, 1 << 20, 1.0)[0] == "mono"
+
+
+def test_choose_grad_rs_prices_param_dtype():
+    # bf16 params: the fused path allgathers half the bytes -> fused
+    name, times = fusion.choose_grad_rs(8, 1 << 22, param_itemsize=2)
+    assert name == "fused" and times["fused"] < times["bucketed"]
+    # f32 params tie on wire bytes; ties go to fused (one kernel pass)
+    name_f32, times_f32 = fusion.choose_grad_rs(8, 1 << 22, param_itemsize=4)
+    assert name_f32 == "fused"
+    assert times_f32["fused"] == pytest.approx(times_f32["bucketed"])
+
+
+def test_choose_fused_tuner_verdict_wins():
+    t = _StubTuner("mono")
+    assert fusion.choose_attention(8, 1 << 20, 1.0, tuner=t)[0] == "mono"
+    assert t.calls[0][0] == "attention"
+    t2 = _StubTuner("bucketed")
+    assert fusion.choose_grad_rs(8, 1 << 22, 2, tuner=t2)[0] == "bucketed"
+    assert t2.calls[0][0] == "grad_sync"
+
+
+# ---------------------------------------------------------------------------
+# ops-layer executor cache: the hot path must not re-trace
+# ---------------------------------------------------------------------------
+
+def test_ops_exec_cache_retrace_free(monkeypatch):
+    kops._clear_exec_cache()
+    calls = {"n": 0}
+    orig = kops._rc.reduce_combine_2d
+
+    def spy(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(kops._rc, "reduce_combine_2d", spy)
+    x = jnp.arange(33 * 130, dtype=jnp.float32).reshape(33, 130)
+    for _ in range(5):
+        out = kops.reduce_combine([x, 2.0 * x], "sum")
+    assert calls["n"] == 1, "pallas wrapper re-traced on a warm call"
+    assert kops._PLAN_STATS == {"hits": 4, "misses": 1}
+    np.testing.assert_allclose(np.asarray(out), np.asarray(3.0 * x),
+                               rtol=1e-6)
+    # a different shape is a different plan, not a cache hit
+    y = jnp.ones((8, 8), jnp.float32)
+    kops.reduce_combine([y, y], "sum")
+    assert kops._PLAN_STATS["misses"] == 2
+
+
+def test_ops_put_copy_cached():
+    kops._clear_exec_cache()
+    x = jnp.arange(7 * 5, dtype=jnp.int32).reshape(7, 5)
+    for _ in range(3):
+        out = kops.put_copy(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    assert kops._PLAN_STATS["hits"] == 2
+
+
+# ---------------------------------------------------------------------------
+# SPMD subprocesses: the model-layer ring path and the fused train sync
+# ---------------------------------------------------------------------------
+
+def _run_spmd(script, ok, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert ok in r.stdout
+
+
+RING_SPMD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import build
+    from repro.launch.mesh import make_mesh
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+    from repro.parallel.comm import AxisSpec, Comm
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab=128,
+                      dtype=jnp.float32, attention="ring")
+    B, Lg, d = 2, 32, 32
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(B, Lg, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(Lg, dtype=jnp.int32), (B, Lg))
+    params = L.init_attention(jax.random.key(0), cfg, 1)
+
+    mono = dataclasses.replace(cfg, attention="mono")
+    mesh1 = make_mesh(1, 1)
+    with jax.set_mesh(mesh1):
+        ref = jax.jit(build.shard_mapped(
+            lambda p, x, pos: L.attention(Comm(AxisSpec(), "shmem"),
+                                          mono, p, x, pos),
+            mesh1, (P(), P(), P()), P()))(params, x, pos)
+    mesh4 = make_mesh(4, 1)
+    with jax.set_mesh(mesh4):
+        out = jax.jit(build.shard_mapped(
+            lambda p, x, pos: L.attention(Comm(AxisSpec(), "shmem"),
+                                          cfg, p, x, pos),
+            mesh4, (P(), P(None, "data"), P(None, "data")),
+            P(None, "data")))(params, x, pos)
+    err = np.abs(np.asarray(ref, np.float32)
+                 - np.asarray(out, np.float32)).max()
+    assert err < 2e-5, err
+    print("RING-SPMD-OK", err)
+""")
+
+
+def test_ring_attention_spmd_model_layer():
+    """layers.attention(attention='ring') on a 4-way sequence shard equals
+    the monolithic layer on the full sequence."""
+    _run_spmd(RING_SPMD, "RING-SPMD-OK")
+
+
+FUSED_SPMD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import build
+    from repro.launch.mesh import make_mesh
+    from repro.parallel.comm import AxisSpec, Comm
+    from repro.train import optimizer as opt
+    from repro.train import step as tstep
+
+    adamw = opt.AdamWConfig()
+    rng = np.random.default_rng(2)
+    params = {"w": jnp.asarray(rng.standard_normal((24, 11))
+                               .astype(np.float32)),
+              "b": jnp.asarray(rng.standard_normal((13,))
+                               .astype(np.float32))}
+    mask = {"w": True, "b": True}
+    n = 4
+    grads = {k: jnp.asarray(rng.standard_normal((n,) + v.shape)
+                            .astype(np.float32))
+             for k, v in params.items()}
+    mesh = make_mesh(n, 1)
+
+    def fused(p, g):
+        g = jax.tree.map(lambda a: a[0], g)     # this PE's grad shard
+        comm = Comm(AxisSpec(), "shmem", grad_rs="fused")
+        st = tstep.init_fused_opt_state(p, n)
+        new_p, new_st = tstep.fused_adam_sync(comm, p, g, st, adamw, mask)
+        return new_p
+
+    def unfused(p, g):
+        g = jax.tree.map(lambda a: a[0], g)
+        comm = Comm(AxisSpec(), "shmem", grad_rs=True)
+        g = tstep.fused_grad_sync(comm, g, mask)
+        st = opt.init_state(p, adamw)
+        new_p, _ = opt.apply_updates(p, g, st, adamw)
+        return new_p
+
+    pspec = {"w": P(), "b": P()}
+    gspec = {"w": P("data"), "b": P("data")}
+    with jax.set_mesh(mesh):
+        a = jax.jit(build.shard_mapped(fused, mesh, (pspec, gspec),
+                                       pspec))(params, grads)
+        b = jax.jit(build.shard_mapped(unfused, mesh, (pspec, gspec),
+                                       pspec))(params, grads)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    print("FUSED-SPMD-OK")
+""")
+
+
+def test_fused_adam_sync_spmd_bitwise():
+    """fused_adam_sync == grad_sync_bucketed-then-apply_updates BITWISE
+    on the SPMD backend (4 host devices, both sides jitted)."""
+    _run_spmd(FUSED_SPMD, "FUSED-SPMD-OK")

@@ -1,0 +1,127 @@
+"""Serving-engine latency/throughput bench (DESIGN.md §15): per-token
+decode latency (p50/p99) and aggregate tok/s vs offered load on the
+continuous-batching engine, single host device (the SIM substrate).
+
+Offered load is batch occupancy: `occ` concurrent sequences sharing the
+fixed-shape decode step.  Per-token latency IS the engine step wall time
+(a sequence's next token lands every step), so p50/p99 come from the
+steady-state decode steps and throughput divides total generated tokens
+by wall time.  A final churn point measures continuous mode: staggered
+arrivals force admission/prefill work between decode steps.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+ARCH = "qwen2-0.5b"
+SLOTS = 4
+PAGE = 8
+MAX_SEQ = 48
+BUCKET = 16
+TOKENS = 24                 # per request -> 23 steady decode samples
+ROWS: list[tuple] = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _engine(cfg, mesh, params=None):
+    from repro.serve.engine import ServeEngine
+    return ServeEngine(cfg, mesh, params=params, max_slots=SLOTS,
+                       page_size=PAGE, max_seq=MAX_SEQ,
+                       prompt_bucket=BUCKET)
+
+
+def _prompts(cfg, n):
+    rng = np.random.default_rng(0)
+    return [rng.integers(1, cfg.vocab, size=12).astype(np.int32)
+            for _ in range(n)]
+
+
+def _drain_timed(eng):
+    """Step the engine dry, classifying step wall times."""
+    prefill_ts, decode_ts, n_tok = [], [], 0
+    while not eng.scheduler.idle():
+        t0 = time.perf_counter()
+        info = eng.step()
+        dt = time.perf_counter() - t0
+        n_tok += len(info["admitted"]) + info["decoded"]
+        (prefill_ts if info["admitted"] else decode_ts).append(dt)
+    return prefill_ts, decode_ts, n_tok
+
+
+def bench_occupancy(cfg, mesh, params, occ):
+    eng = _engine(cfg, mesh, params)
+    warm = eng.submit(_prompts(cfg, 1)[0], 2)     # compile both paths
+    eng.run()
+    del warm
+    for p in _prompts(cfg, occ):
+        eng.submit(p, TOKENS)
+    prefill_ts, decode_ts, n_tok = _drain_timed(eng)
+    wall = sum(prefill_ts) + sum(decode_ts)
+    p50, p99 = np.percentile(np.asarray(decode_ts) * 1e6, [50, 99])
+    tok_s = n_tok / wall
+    kv_b = eng.page_bytes * occ * ((12 + TOKENS + PAGE - 1) // PAGE)
+    row(f"serve_decode_p50_us_occ{occ}", p50,
+        f"steps={len(decode_ts)} page={PAGE}tok kv={kv_b}B")
+    row(f"serve_decode_p99_us_occ{occ}", p99,
+        f"steps={len(decode_ts)} page={PAGE}tok")
+    row(f"serve_tok_per_s_occ{occ}", tok_s,
+        f"tokens={n_tok} wall={wall * 1e3:.0f}ms (value is tok/s)")
+    if prefill_ts:
+        row(f"serve_prefill_step_us_occ{occ}",
+            float(np.mean(prefill_ts) * 1e6),
+            f"bucket={BUCKET} (admission step: prefill + first decode)")
+    return eng.params
+
+
+def bench_churn(cfg, mesh, params):
+    """Continuous mode: one arrival every 2 engine steps against a
+    saturated 4-slot batch — admission/prefill interleaves with decode."""
+    eng = _engine(cfg, mesh, params)
+    eng.submit(_prompts(cfg, 1)[0], 2)
+    eng.run()                                     # compile
+    prompts = _prompts(cfg, 10)
+    nxt = 0
+    decode_ts, n_tok = [], 0
+    t_start = time.perf_counter()
+    while nxt < len(prompts) or not eng.scheduler.idle():
+        if nxt < len(prompts) and eng.steps % 2 == 0:
+            eng.submit(prompts[nxt], TOKENS)
+            nxt += 1
+        t0 = time.perf_counter()
+        info = eng.step()
+        dt = time.perf_counter() - t0
+        n_tok += len(info["admitted"]) + info["decoded"]
+        if not info["admitted"] and info["decoded"]:
+            decode_ts.append(dt)
+    wall = time.perf_counter() - t_start
+    p50, p99 = np.percentile(np.asarray(decode_ts) * 1e6, [50, 99])
+    row("serve_decode_p50_us_churn", p50,
+        f"arrivals=1/2steps reqs={len(prompts)} steps={eng.steps}")
+    row("serve_decode_p99_us_churn", p99, f"steps={len(decode_ts)}")
+    row("serve_tok_per_s_churn", n_tok / wall,
+        f"tokens={n_tok} wall={wall * 1e3:.0f}ms (value is tok/s)")
+
+
+def main():
+    from repro.configs import smoke_config
+    from repro.launch.mesh import make_mesh
+
+    print("name,us,derived")
+    cfg = smoke_config(ARCH)
+    mesh = make_mesh(1, 1)
+    params = None
+    for occ in (1, 2, 4):
+        params = bench_occupancy(cfg, mesh, params, occ)
+    bench_churn(cfg, mesh, params)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,8 @@ PINS: list[tuple[str, str]] = [
     ("fused", "attn_mono_262144B_us"),
     ("fused", "grad_rs_fused_16777216B_us"),
     ("fused", "grad_rs_unfused_16777216B_us"),
+    ("serve", "serve_decode_p50_us_occ1"),
+    ("serve", "serve_decode_p50_us_occ4"),
 ]
 
 

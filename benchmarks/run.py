@@ -85,6 +85,9 @@ BENCHES = [
     ("fused", False, _module_runner(
         "bench_fused",
         "fused comm-compute: ring attention + RS->AdamW (bytes + time)")),
+    ("serve", False, _module_runner(
+        "bench_serve",
+        "serving engine: per-token p50/p99 + tok/s vs offered load")),
 ]
 
 

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests: prefill + decode over the
-shmem substrate, greedy sampling through vocab-sharded logits.
+"""Serve a small model through the continuous-batching engine: paged
+KV cache on the symmetric heap, one-pass prefill, per-step join/evict
+with requests arriving every other engine step (DESIGN.md §15).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -10,5 +11,7 @@ from repro.launch import serve as serve_mod
 
 if __name__ == "__main__":
     serve_mod.main([
-        "--arch", "qwen2-0.5b", "--smoke", "--batch", "4",
-        "--prompt-len", "16", "--tokens", "16", "--cache-len", "64"])
+        "--arch", "qwen2-0.5b", "--smoke", "--continuous",
+        "--requests", "8", "--rate", "2", "--slots", "4",
+        "--prompt-len", "16", "--tokens", "16", "--cache-len", "64",
+        "--page-size", "8"])

@@ -394,6 +394,130 @@ def _cache_attend(cfg, q, ck, cv, valid, slot_map=None, comm=None,
 
 
 # ---------------------------------------------------------------------------
+# Paged KV attention (serving engine, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def paged_kv_update(pool_leaf, page_table, new, positions, page_size: int):
+    """Scatter per-position rows into a paged KV pool.
+
+    pool_leaf: (num_pages, page_size, ...) — one layer's page pool;
+    page_table: (B, max_pages) int32 physical page ids (0 = null page);
+    new: (B, L, ...) rows to write; positions: (B, L) global positions.
+    Rows land at pool[page_table[b, pos // page_size], pos % page_size].
+    Distinct sequences own distinct pages, so batched writes never
+    collide except on the reserved null page (whose contents are never
+    read through a valid mask)."""
+    B = positions.shape[0]
+    page = positions // page_size
+    off = positions % page_size
+    phys = jnp.take_along_axis(page_table, page, axis=1)     # (B, L)
+    return pool_leaf.at[phys, off].set(new.astype(pool_leaf.dtype))
+
+
+def paged_kv_gather(pool_leaf, page_table):
+    """Gather a sequence-contiguous (B, S_max, ...) view of each row's
+    pages (S_max = max_pages * page_size).  Invalid/unallocated table
+    entries point at the null page; the attention validity mask excludes
+    them."""
+    got = jnp.take(pool_leaf, page_table, axis=0)   # (B, P, ps, ...)
+    B, P, ps = got.shape[0], got.shape[1], got.shape[2]
+    return got.reshape((B, P * ps) + got.shape[3:])
+
+
+def _attend_mq(cfg, q, ck, cv, valid, slot_map=None):
+    """Multi-query generalization of `_cache_attend` for the paged path.
+
+    q: (B,L,Hq,hd); ck/cv: (B,S,K,hd); valid: (B,L,S) -> (B,L,Hq,hd).
+    Shared by paged prefill (L = prompt bucket) and paged decode (L = 1)
+    so both attend through identical einsum contractions — the engine's
+    batched-vs-alone bit-identity rests on every op being per-row."""
+    B, S = ck.shape[0], ck.shape[1]
+    hd = cfg.hd
+    qf = q.astype(jnp.float32) / math.sqrt(hd)               # (B,L,Hq,hd)
+    kf, vf = ck.astype(jnp.float32), cv.astype(jnp.float32)
+    if slot_map is not None:
+        logits = jnp.einsum("blqd,bskd->blqks", qf, kf)
+        logits = jnp.einsum("blqks,qk->blqs", logits, slot_map)
+    else:
+        K = ck.shape[2]
+        group = qf.shape[2] // K
+        qg = qf.reshape(B, qf.shape[1], K, group, hd)
+        logits = jnp.einsum("blkgd,bskd->blkgs", qg, kf) \
+            .reshape(B, qf.shape[1], K * group, S)
+    if cfg.softcap is not None:
+        logits = cfg.softcap * jnp.tanh(logits / cfg.softcap)
+    logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+    m = jnp.max(logits, -1, keepdims=True)
+    p_ = jnp.exp(logits - m)
+    l_den = jnp.sum(p_, -1, keepdims=True)
+    if slot_map is not None:
+        ctx = jnp.einsum("blqs,bskd->blqkd", p_, vf)
+        acc = jnp.einsum("blqkd,qk->blqd", ctx, slot_map)
+    else:
+        K = ck.shape[2]
+        group = p_.shape[2] // K
+        pg = p_.reshape(B, p_.shape[1], K, group, S)
+        acc = jnp.einsum("blkgs,bskd->blkgd", pg, vf) \
+            .reshape(B, p_.shape[1], p_.shape[2], hd)
+    return acc / jnp.maximum(l_den, 1e-30)
+
+
+def attention_paged(comm: Comm, cfg: ModelConfig, p: Params, x, pool,
+                    page_table, positions, *, page_size: int,
+                    is_local_layer: bool = False):
+    """GQA attention against a paged KV pool — one code path for prefill
+    (x: (B, L, d), L = prompt bucket) and decode (L = 1).
+
+    pool: {"k","v"} (num_pages, page_size, K_local, hd); page_table:
+    (B, max_pages) physical page ids.  K/V rows for every position are
+    scattered into the owning page, then each row's pages are gathered
+    back sequence-contiguous and attended with a causal(+window) mask.
+    Sliding windows are handled purely by masking (pages keep the full
+    sequence), so paged results equal the full-length dense cache path."""
+    tp = comm.axis_size(comm.axes.model)
+    B, L, d = x.shape
+    hd = cfg.hd
+    nq_local, nkv_store, kv_repl = _gqa_dims(cfg, tp)
+    q = _dense(x, p["wq"], p.get("bq")).reshape(B, L, nq_local, hd)
+    k = _dense(x, p["wk"], p.get("bk")).reshape(B, L, nkv_store, hd)
+    v = _dense(x, p["wv"], p.get("bv")).reshape(B, L, nkv_store, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    slot_map = None
+    if kv_repl:
+        ndk, store_idx, q2slot = kv_cache_plan(cfg, tp)
+        rank = comm.axis_index(comm.axes.model)
+        sidx = jnp.asarray(store_idx)[rank]                  # (ndk,)
+        k = jnp.take(k, sidx, axis=2)
+        v = jnp.take(v, sidx, axis=2)
+        q2 = jnp.asarray(q2slot)[rank]                       # (nq_local,)
+        slot_map = jax.nn.one_hot(q2, ndk, dtype=jnp.float32)
+
+    pk = paged_kv_update(pool["k"], page_table, k, positions, page_size)
+    pv = paged_kv_update(pool["v"], page_table, v, positions, page_size)
+    ck = paged_kv_gather(pk, page_table)                     # (B,S_max,K,hd)
+    cv = paged_kv_gather(pv, page_table)
+
+    S_max = ck.shape[1]
+    window = cfg.window
+    if cfg.local_global_period is not None and is_local_layer:
+        window = cfg.local_window
+    kv_pos = jnp.arange(S_max)[None, None, :]                # (1,1,S)
+    valid = kv_pos <= positions[:, :, None]
+    if window is not None:
+        valid &= kv_pos > (positions[:, :, None] - window)
+
+    out = _attend_mq(cfg, q, ck, cv, valid, slot_map)
+    if cfg.n_heads % tp:   # zero ghost heads
+        _, valid_h = _head_ids(comm, cfg, tp)
+        out = out * valid_h[None, None, :, None]
+    out = out.reshape(B, L, nq_local * hd).astype(cfg.dtype)
+    y = _dense(out, p["wo"])
+    return comm.allreduce(y, comm.axes.model), {"k": pk, "v": pv}
+
+
+# ---------------------------------------------------------------------------
 # MLA (deepseek-v3): latent KV, cache = compressed c_kv (+ rope key)
 # ---------------------------------------------------------------------------
 

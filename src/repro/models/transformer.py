@@ -471,3 +471,105 @@ def prefill(comm: Comm, cfg: ModelConfig, params: Params, tokens=None, *,
                    frontend_embeds=frontend_embeds)
     logits = L.lm_logits(comm, cfg, params["embed"], h[:, -1:])
     return logits
+
+
+# ---------------------------------------------------------------------------
+# paged KV (serving engine, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def paged_families() -> tuple[str, ...]:
+    """Families the paged-KV serving path supports (attention KV caches;
+    SSM/MLA state is not paged — the engine guards on this)."""
+    return ("dense", "vlm")
+
+
+def init_kv_pool(cfg: ModelConfig, tp: int, num_pages: int,
+                 page_size: int) -> Params:
+    """Stacked per-layer-group paged KV pools: like `init_cache` but the
+    (B, S) cache dims become (num_pages, page_size) — page p of every
+    sequence lives at the SAME physical index in every layer's pool, so
+    one page table serves the whole stack."""
+    if cfg.family not in paged_families():
+        raise ValueError(
+            f"paged KV supports {paged_families()}, not {cfg.family!r}")
+
+    def stack(n, fn):
+        one = fn()
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (n,) + a.shape).copy(), one)
+
+    def one_pool():
+        return L.init_attn_cache(cfg, tp, num_pages, page_size)
+
+    if cfg.local_global_period:
+        return {"pairs_local": stack(cfg.n_layers // 2, one_pool),
+                "pairs_global": stack(cfg.n_layers // 2, one_pool)}
+    return {"layers": stack(cfg.n_layers, one_pool)}
+
+
+def _attn_block_paged(comm, cfg, bp, x, pool, page_table, positions,
+                      page_size, is_local=False):
+    h = L.rms_norm(x, bp["ln1"])
+    a, pool = L.attention_paged(comm, cfg, bp["attn"], h, pool, page_table,
+                                positions, page_size=page_size,
+                                is_local_layer=is_local)
+    x = x + a
+    h = L.rms_norm(x, bp["ln2"])
+    return x + L.mlp(comm, cfg, bp["mlp"], h), pool
+
+
+def _paged_stack(comm, cfg, params, pool, page_table, x, positions,
+                 page_size):
+    """Run the layer stack against paged KV pools.  One code path for
+    prefill (L = prompt bucket) and decode (L = 1): identical traced ops
+    per row is what makes the engine's batched-vs-alone decode tokens
+    bit-identical (DESIGN.md §15)."""
+    if cfg.local_global_period:
+        def pair(x, ps):
+            bp_l, bp_g, p_l, p_g = ps
+            x, p_l = _attn_block_paged(comm, cfg, bp_l, x, p_l, page_table,
+                                       positions, page_size, is_local=True)
+            x, p_g = _attn_block_paged(comm, cfg, bp_g, x, p_g, page_table,
+                                       positions, page_size)
+            return x, (p_l, p_g)
+        x, (pl, pg) = _scan(cfg, pair, x,
+                            (params["pairs"]["local"],
+                             params["pairs"]["global"],
+                             pool["pairs_local"], pool["pairs_global"]))
+        return x, {"pairs_local": pl, "pairs_global": pg}
+    def step(x, bc):
+        bp, pl = bc
+        x, pl = _attn_block_paged(comm, cfg, bp, x, pl, page_table,
+                                  positions, page_size)
+        return x, pl
+    x, np_ = _scan(cfg, step, x, (params["layers"], pool["layers"]))
+    return x, {"layers": np_}
+
+
+def prefill_paged(comm: Comm, cfg: ModelConfig, params: Params, pool: Params,
+                  page_table, tokens, positions, *, page_size: int):
+    """Paged prefill fast-path: ONE forward pass over the whole prompt
+    bucket that also fills the sequence's KV pages (vs the seed launcher's
+    per-token teacher forcing).  tokens: (B, L_bucket); positions: (B,
+    L_bucket).  Returns (full-bucket logits (B, L, vocab_local), pool).
+    Rows past the true prompt length write garbage K/V into the row's own
+    reserved (or null) pages; decode overwrites each position before the
+    causal mask can ever expose it."""
+    x = _embed_scaled(comm, cfg, params, tokens)
+    x, pool = _paged_stack(comm, cfg, params, pool, page_table, x,
+                           positions, page_size)
+    x = L.rms_norm(x, params["final_norm"])
+    return L.lm_logits(comm, cfg, params["embed"], x), pool
+
+
+def decode_step_paged(comm: Comm, cfg: ModelConfig, params: Params,
+                      pool: Params, page_table, tokens, positions, *,
+                      page_size: int):
+    """One paged decode step: tokens (B,1), positions (B,) -> (logits
+    (B,1,vocab_local), pool).  Identical to `decode_step` numerics on a
+    full-length cache; reads are page-table indexed."""
+    x = _embed_scaled(comm, cfg, params, tokens)
+    x, pool = _paged_stack(comm, cfg, params, pool, page_table, x,
+                           positions[:, None], page_size)
+    x = L.rms_norm(x, params["final_norm"])
+    return L.lm_logits(comm, cfg, params["embed"], x), pool

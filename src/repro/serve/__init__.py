@@ -1,1 +1,14 @@
-"""serve subsystem."""
+"""serve subsystem: continuous-batching engine on the paged
+symmetric-heap KV cache (DESIGN.md §15).
+
+Engine imports are lazy (`ServeEngine` pulls in jax/model code); the
+pure-host pieces (`PagePool`, `PagedKV`, `Scheduler`) import cheaply for
+devices-free scheduler tests."""
+from .kv import PagedKV, PagePool, PagePoolError, pages_for  # noqa: F401
+
+
+def __getattr__(name):
+    if name in ("ServeEngine", "Scheduler", "Request", "SlotState"):
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

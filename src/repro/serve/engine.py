@@ -1,0 +1,330 @@
+"""Continuous-batching serving engine on the paged symmetric-heap KV
+cache (DESIGN.md §15).
+
+Three pieces, separable on purpose:
+
+  * `Scheduler` — the pure-host continuous-batching policy.  Strict-FIFO
+    admission into fixed engine slots with worst-case page reservation
+    (prompt + max_new tokens) at admission time, per-step join/evict.
+    Deterministic and devices-free, so the policy is unit-testable as a
+    plain state machine (tests/test_serve_engine.py drives it with a
+    synthetic arrival trace).
+  * `PagedKV`/`PagePool` (serve/kv.py) — page bookkeeping on the
+    symmetric heap.  Heap pressure is admission backpressure: a request
+    that doesn't fit simply waits at the queue head (no skipping, so no
+    starvation), and no `HeapError` ever escapes the engine.
+  * `ServeEngine` — the device half: a paged prefill fast-path (ONE
+    forward pass over the prompt bucket that fills the sequence's KV
+    pages) plus a fixed-shape batched decode step over all slots.
+    Inactive slots ride along masked (their page-table rows point at the
+    reserved null page), so the decode step never recompiles as
+    sequences join and leave.  Every per-row op is batch-independent, so
+    a request's greedy tokens are bit-identical whether it runs alone or
+    joins mid-batch — the engine's core correctness invariant.
+
+Model-axis collectives (attention allreduces, the vocab-sharded greedy
+sample) run through `Comm`, so a `TunedSelector`/`Profiler` passed to
+the engine prices and records every per-step collective (DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .kv import PagedKV, PagePool, pages_for
+from ..core.heap import SymmetricHeap
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    pos: int                     # next position to be written by decode
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Scheduler:
+    """Deterministic continuous-batching policy (pure host code).
+
+    Admission is strict FIFO: free slots are filled in slot-index order
+    from the queue head, stopping at the first request whose worst-case
+    page reservation does not fit — the head is never skipped, so a big
+    request cannot starve behind a stream of small ones.  Eviction scans
+    slots in index order each step.  Given the same submission sequence
+    and per-slot completion times, the (admit, evict) event order is a
+    pure function of the trace."""
+
+    def __init__(self, kv: PagedKV, page_size: int):
+        self.kv = kv
+        self.page_size = int(page_size)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[SlotState | None] = [None] * kv.max_slots
+        self._next_rid = 0
+        self.n_admitted = 0
+        self.n_evicted = 0
+
+    def pages_needed(self, req: Request) -> int:
+        return pages_for(len(req.prompt) + req.max_new, self.page_size)
+
+    def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        req = Request(self._next_rid, prompt, int(max_new))
+        if self.pages_needed(req) > self.kv.max_pages:
+            raise ValueError(
+                f"request needs {self.pages_needed(req)} pages "
+                f"> max_pages={self.kv.max_pages}")
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def step_evict(self) -> list[tuple[int, SlotState]]:
+        """Evict finished sequences (slot-index order), freeing their
+        pages back to the pool."""
+        out = []
+        for i, st in enumerate(self.slots):
+            if st is not None and st.done:
+                self.kv.evict(i)
+                self.slots[i] = None
+                self.n_evicted += 1
+                out.append((i, st))
+        return out
+
+    def step_admit(self) -> list[tuple[int, SlotState]]:
+        """Admit queued requests into free slots while pages last."""
+        out = []
+        for slot, st in enumerate(self.slots):
+            if st is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = self.pages_needed(req)
+            if not self.kv.can_admit(need):
+                break           # backpressure: head waits, nobody skips
+            self.queue.popleft()
+            self.kv.admit(slot, req.rid, need,
+                          len(req.prompt) + req.max_new)
+            state = SlotState(rid=req.rid, prompt=req.prompt,
+                              max_new=req.max_new, pos=len(req.prompt))
+            self.slots[slot] = state
+            self.n_admitted += 1
+            out.append((slot, state))
+        return out
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)
+
+
+class ServeEngine:
+    """Continuous-batching engine: paged prefill + fixed-shape batched
+    decode over `max_slots` sequences, greedy sampling through the
+    vocab-sharded `sample_greedy`.
+
+    The mesh provides tensor parallelism only (data axis must be 1: the
+    batch lives in engine slots, not on a mesh axis).  `kv_heap_bytes`
+    caps the per-PE symmetric-heap KV region — by default sized to hold
+    every slot's worst-case sequence plus the null page."""
+
+    def __init__(self, cfg, mesh, *, params=None, max_slots: int = 4,
+                 page_size: int = 8, max_seq: int = 64,
+                 prompt_bucket: int = 32, kv_heap_bytes: int | None = None,
+                 backend: str = "shmem", allreduce_algo: str = "paper",
+                 topo=None, link=None, embedding=None, tuner=None,
+                 profile=None, eos_id: int | None = None, init_key: int = 0,
+                 capture_logits: bool = False):
+        import dataclasses as dc
+
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from ..launch import build
+        from ..models import transformer
+        from ..parallel.comm import Comm
+        from . import step as sstep
+
+        cfg = dc.replace(cfg, fsdp=False)
+        if cfg.family not in transformer.paged_families():
+            raise ValueError(
+                f"paged serving supports {transformer.paged_families()}, "
+                f"not {cfg.family!r}")
+        dp, tp, pod = build.mesh_dims(mesh)
+        if dp != 1 or pod:
+            raise ValueError("ServeEngine batches in engine slots; use a "
+                             "(1, tp) mesh (data axis must be 1, no pod)")
+        if prompt_bucket > max_seq:
+            raise ValueError("prompt_bucket must be <= max_seq")
+        self.cfg, self.mesh = cfg, mesh
+        self.page_size = int(page_size)
+        self.max_seq = int(max_seq)
+        self.prompt_bucket = int(prompt_bucket)
+        self.max_slots = int(max_slots)
+        self.eos_id = eos_id
+        self.capture_logits = capture_logits
+        self._jnp, self._jax = jnp, jax
+
+        max_pages = pages_for(max_seq, page_size)
+        pool_shapes = jax.eval_shape(
+            lambda: transformer.init_kv_pool(cfg, tp, 1, page_size))
+        page_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(pool_shapes))
+        if kv_heap_bytes is None:
+            kv_heap_bytes = page_bytes * (max_slots * max_pages + 1)
+        self.page_bytes = page_bytes
+        self.heap = SymmetricHeap(int(kv_heap_bytes))
+        pool = PagePool(self.heap, page_bytes)
+        if pool.num_pages < 2:
+            raise ValueError(
+                f"kv_heap_bytes={kv_heap_bytes} holds {pool.num_pages} "
+                f"pages of {page_bytes}B; need >= 2 (null + one live)")
+        self.kv = PagedKV(pool, max_slots, max_pages)
+        self.scheduler = Scheduler(self.kv, page_size)
+        self.results: dict[int, np.ndarray] = {}
+        self.logits_trace: dict[int, list] = {}
+        self.steps = 0
+
+        axes = build.axis_spec(mesh)
+        comm_kw = dict(allreduce_algo=allreduce_algo, topo=topo, link=link,
+                       embedding=embedding, tuner=tuner, profile=profile)
+        n_dev_pages = pool.num_pages
+
+        with jax.set_mesh(mesh):
+            init_fn, pshapes, pspecs = build.make_init_fn(cfg, mesh, backend)
+            if params is None:
+                params = jax.jit(init_fn)(jax.random.key(init_key))
+            self.params = params
+            self._pspecs = pspecs
+
+            pool_struct = jax.eval_shape(lambda: transformer.init_kv_pool(
+                cfg, tp, n_dev_pages, page_size))
+            poolspecs = jax.tree.map(
+                lambda _: P(None, None, None, "model", None), pool_struct)
+            self._poolspecs = poolspecs
+            self.pool = jax.jit(build.shard_mapped(
+                lambda: transformer.init_kv_pool(cfg, tp, n_dev_pages,
+                                                 page_size),
+                mesh, (), poolspecs))()
+
+            def prefill_fn(params, pool, table, tokens, positions, last_idx):
+                comm = Comm(axes, backend, **comm_kw)
+                logits, pool = transformer.prefill_paged(
+                    comm, cfg, params, pool, table, tokens, positions,
+                    page_size=page_size)
+                lg = jnp.take_along_axis(
+                    logits, last_idx[:, None, None], axis=1)[:, 0]
+                tok = sstep.sample_greedy(comm, lg)
+                return tok, lg, pool
+
+            def decode_fn(params, pool, table, tokens, positions):
+                comm = Comm(axes, backend, **comm_kw)
+                logits, pool = transformer.decode_step_paged(
+                    comm, cfg, params, pool, table, tokens, positions,
+                    page_size=page_size)
+                lg = logits[:, 0]
+                tok = sstep.sample_greedy(comm, lg)
+                return tok, lg, pool
+
+            lg_spec = P(None, "model")
+            self._pjit = jax.jit(build.shard_mapped(
+                prefill_fn, mesh,
+                (pspecs, poolspecs, P(), P(), P(), P()),
+                (P(), lg_spec, poolspecs)))
+            self._djit = jax.jit(build.shard_mapped(
+                decode_fn, mesh,
+                (pspecs, poolspecs, P(), P(), P()),
+                (P(), lg_spec, poolspecs)))
+
+    # -- client API -----------------------------------------------------------
+    def submit(self, prompt, max_new: int) -> int:
+        if len(np.asarray(prompt).reshape(-1)) > self.prompt_bucket:
+            raise ValueError(
+                f"prompt longer than prompt_bucket={self.prompt_bucket}")
+        return self.scheduler.submit(prompt, max_new)
+
+    def _emit(self, st: SlotState, tok: int, lg=None) -> None:
+        st.out.append(int(tok))
+        if self.capture_logits:
+            self.logits_trace.setdefault(st.rid, []).append(
+                np.asarray(lg, np.float32))
+        if (len(st.out) >= st.max_new
+                or (self.eos_id is not None and int(tok) == self.eos_id)):
+            st.done = True
+
+    def step(self) -> dict:
+        """One engine iteration: evict -> admit(+prefill) -> batched
+        decode.  Returns {"evicted": [...], "admitted": [...],
+        "decoded": n_active}."""
+        jnp = self._jnp
+        sched = self.scheduler
+        with self._jax.set_mesh(self.mesh):
+            evicted = []
+            for slot, st in sched.step_evict():
+                self.results[st.rid] = np.asarray(st.out, np.int32)
+                evicted.append(st.rid)
+
+            admitted = []
+            for slot, st in sched.step_admit():
+                Lb = self.prompt_bucket
+                toks = np.zeros((1, Lb), np.int32)
+                toks[0, :len(st.prompt)] = st.prompt
+                positions = jnp.broadcast_to(
+                    jnp.arange(Lb, dtype=jnp.int32)[None], (1, Lb))
+                trow = jnp.asarray(self.kv.table[slot:slot + 1])
+                last = jnp.asarray([len(st.prompt) - 1], jnp.int32)
+                tok, lg, self.pool = self._pjit(
+                    self.params, self.pool, trow, jnp.asarray(toks),
+                    positions, last)
+                self._emit(st, np.asarray(tok)[0],
+                           np.asarray(lg)[0] if self.capture_logits
+                           else None)
+                admitted.append(st.rid)
+
+            active = sched.active_slots()
+            if active:
+                toks = np.zeros((self.max_slots, 1), np.int32)
+                poss = np.zeros((self.max_slots,), np.int32)
+                for i in active:
+                    st = sched.slots[i]
+                    toks[i, 0] = st.out[-1]
+                    poss[i] = st.pos
+                tok, lg, self.pool = self._djit(
+                    self.params, self.pool, jnp.asarray(self.kv.table),
+                    jnp.asarray(toks), jnp.asarray(poss))
+                tok = np.asarray(tok)
+                lg = np.asarray(lg) if self.capture_logits else None
+                for i in active:
+                    st = sched.slots[i]
+                    st.pos += 1
+                    self._emit(st, tok[i],
+                               lg[i] if self.capture_logits else None)
+        self.steps += 1
+        return {"evicted": evicted, "admitted": admitted,
+                "decoded": len(active)}
+
+    def run(self, max_steps: int = 100_000) -> dict[int, np.ndarray]:
+        """Drain queue and slots; returns {rid: generated tokens}."""
+        for _ in range(max_steps):
+            if self.scheduler.idle():
+                break
+            self.step()
+        # final evict pass so the last finishers land in results
+        for slot, st in self.scheduler.step_evict():
+            self.results[st.rid] = np.asarray(st.out, np.int32)
+        return self.results

@@ -1,0 +1,190 @@
+"""Paged KV-cache bookkeeping on the symmetric heap (serve/kv.py):
+page alloc/free/reuse round-trips over the brk discipline, heap
+exhaustion surfacing as clean admission backpressure (`PagePoolError`,
+never `HeapError`), and fragmentation-free page reuse after eviction.
+Pure host code — no devices."""
+import numpy as np
+import pytest
+
+from repro.core.heap import HeapError, SymmetricHeap
+from repro.serve import PagedKV, PagePool, PagePoolError, pages_for
+
+PAGE = 256          # bytes; multiple of the heap's 8-byte default align
+
+
+def make_pool(n_pages: int, **kw) -> PagePool:
+    # +1 for the reserved null page
+    return PagePool(SymmetricHeap((n_pages + 1) * PAGE), PAGE, **kw)
+
+
+# ---------------------------------------------------------------------------
+# pages_for
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,ps,want", [
+    (0, 8, 0), (1, 8, 1), (8, 8, 1), (9, 8, 2), (17, 8, 3), (64, 16, 4),
+])
+def test_pages_for(n, ps, want):
+    assert pages_for(n, ps) == want
+
+
+# ---------------------------------------------------------------------------
+# PagePool: alloc / free / reuse round-trips
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_roundtrip_restores_brk():
+    pool = make_pool(4)
+    assert pool.null_page == 0 and pool.live_pages() == 0
+    brk0 = pool.heap.brk                       # null page only
+    a = pool.alloc(3)
+    assert a == [1, 2, 3] and pool.live_pages() == 3
+    assert pool.heap.brk == brk0 + 3 * PAGE    # brk advanced page by page
+    pool.free(reversed(a))
+    # all pages free -> the pool rolled the brk back to the null page
+    assert pool.live_pages() == 0
+    assert pool.heap.brk == brk0
+    # and the full capacity is available again
+    assert pool.pages_available() == 4
+    b = pool.alloc(4)
+    assert sorted(b) == [1, 2, 3, 4]
+
+
+def test_freed_pages_recycle_lifo_before_brk_grows():
+    pool = make_pool(8)
+    first = pool.alloc(2)                      # [1, 2]
+    keep = pool.alloc(1)                       # [3] stays live: no trim
+    pool.free(reversed(first))
+    brk = pool.heap.brk
+    again = pool.alloc(2)
+    # the free list hands back the same pages (LIFO) without touching brk
+    assert again == first
+    assert pool.heap.brk == brk
+    pool.free(reversed(again))
+    pool.free(keep)
+
+
+def test_alloc_is_all_or_nothing():
+    pool = make_pool(3)
+    pool.alloc(2)
+    with pytest.raises(PagePoolError):
+        pool.alloc(2)                          # only 1 page left
+    # the rejected call held no partial reservation
+    assert pool.pages_available() == 1
+    assert pool.alloc(1) == [3]
+
+
+def test_exhaustion_raises_pagepoolerror_not_heaperror():
+    pool = make_pool(2)
+    pool.alloc(2)
+    with pytest.raises(PagePoolError) as ei:
+        pool.alloc(1)
+    assert not isinstance(ei.value, HeapError)
+    # __cause__ is suppressed: callers never see heap internals
+    assert ei.value.__cause__ is None
+
+
+def test_double_free_and_null_free_rejected():
+    pool = make_pool(2)
+    (pid,) = pool.alloc(1)
+    with pytest.raises(PagePoolError):
+        pool.free([pool.null_page])
+    pool2 = make_pool(2)
+    (q,) = pool2.alloc(1)
+    pool2.alloc(1)                 # keep one live so no trim resets state
+    pool2.free([q])
+    with pytest.raises(PagePoolError):
+        pool2.free([q])
+    del pid
+
+
+def test_pool_requires_fresh_heap():
+    heap = SymmetricHeap(4 * PAGE)
+    heap.malloc(8)
+    with pytest.raises(PagePoolError):
+        PagePool(heap, PAGE)
+
+
+def test_page_bytes_alignment_padding():
+    # page_bytes gets padded up to the heap alignment so page ids stay
+    # exact offset multiples
+    heap = SymmetricHeap(1024, default_align=64)
+    pool = PagePool(heap, 100)     # -> padded to 128
+    assert pool.page_bytes == 128
+    a = pool.alloc(2)
+    assert a == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# PagedKV: admission, eviction, fragmentation-free reuse
+# ---------------------------------------------------------------------------
+
+def test_admit_fills_table_and_evict_resets_it():
+    pool = make_pool(8)
+    kv = PagedKV(pool, max_slots=2, max_pages=4)
+    assert (kv.table == pool.null_page).all()
+    sp = kv.admit(0, rid=7, n_pages=3, n_tokens=20)
+    assert sp.pages == [1, 2, 3]
+    assert kv.table[0, :3].tolist() == [1, 2, 3]
+    assert (kv.table[0, 3:] == pool.null_page).all()
+    assert (kv.table[1] == pool.null_page).all()
+    assert kv.occupied() == [0] and kv.slot(0).rid == 7
+    kv.evict(0)
+    assert (kv.table == pool.null_page).all()
+    assert kv.occupied() == [] and pool.live_pages() == 0
+
+
+def test_admission_backpressure_no_heaperror_escapes():
+    pool = make_pool(4)
+    kv = PagedKV(pool, max_slots=4, max_pages=4)
+    kv.admit(0, rid=0, n_pages=3, n_tokens=24)
+    assert not kv.can_admit(2)                 # only 1 page left
+    assert kv.can_admit(1)
+    # forcing the admit anyway raises the pool error, not HeapError
+    with pytest.raises(PagePoolError):
+        kv.admit(1, rid=1, n_pages=2, n_tokens=16)
+    # the failed admission left slot 1 clean and the table untouched
+    assert kv.slot(1) is None
+    assert (kv.table[1] == pool.null_page).all()
+    kv.admit(1, rid=1, n_pages=1, n_tokens=8)  # the fitting size goes in
+
+
+def test_oversized_request_rejected_by_max_pages():
+    kv = PagedKV(make_pool(16), max_slots=2, max_pages=4)
+    assert not kv.can_admit(5)
+    with pytest.raises(PagePoolError):
+        kv.admit(0, rid=0, n_pages=5, n_tokens=40)
+
+
+def test_fragmentation_free_reuse_after_eviction():
+    """Churn admissions through interleaved slots: every generation gets
+    the same physical pages back and the brk never creeps."""
+    pool = make_pool(6)
+    kv = PagedKV(pool, max_slots=3, max_pages=2)
+    kv.admit(0, 0, 2, 16)
+    kv.admit(1, 1, 2, 16)
+    kv.admit(2, 2, 2, 16)
+    brk_full = pool.heap.brk
+    pages1 = list(kv.slot(1).pages)
+    for gen in range(10):
+        kv.evict(1)                            # hole in the middle
+        sp = kv.admit(1, rid=100 + gen, n_pages=2, n_tokens=16)
+        assert sp.pages == pages1              # exact pages recycled
+        assert pool.heap.brk == brk_full       # no brk growth, ever
+    kv.evict(0), kv.evict(1), kv.evict(2)
+    assert pool.heap.brk == PAGE               # back to null page only
+
+
+def test_double_admit_same_slot_rejected():
+    kv = PagedKV(make_pool(8), max_slots=2, max_pages=4)
+    kv.admit(0, 0, 1, 8)
+    with pytest.raises(PagePoolError):
+        kv.admit(0, 1, 1, 8)
+    with pytest.raises(PagePoolError):
+        kv.evict(1)                            # empty slot
+
+
+def test_table_dtype_and_null_default():
+    kv = PagedKV(make_pool(4), max_slots=3, max_pages=2)
+    assert kv.table.dtype == np.int32
+    assert kv.table.shape == (3, 2)
+    assert (kv.table == 0).all()               # null page is page 0

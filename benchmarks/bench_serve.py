@@ -81,6 +81,38 @@ def bench_occupancy(cfg, mesh, params, occ):
     return eng.params
 
 
+def bench_metrics(cfg, mesh, params):
+    """The ServeMetrics histograms against external timing (DESIGN.md
+    §16 acceptance): the engine-recorded per-token p50 must agree with
+    the externally measured decode-step p50, since both time the same
+    forced sync — a loose factor-1.5 tolerance absorbs the scheduler
+    bookkeeping outside the engine's own timer."""
+    from repro.serve.engine import ServeEngine
+    from repro.serve.metrics import ServeMetrics
+
+    m = ServeMetrics()
+    eng = ServeEngine(cfg, mesh, params=params, max_slots=SLOTS,
+                      page_size=PAGE, max_seq=MAX_SEQ,
+                      prompt_bucket=BUCKET, metrics=m)
+    eng.submit(_prompts(cfg, 1)[0], 2)            # compile both paths
+    eng.run()
+    for p in _prompts(cfg, SLOTS):
+        eng.submit(p, TOKENS)
+    _, decode_ts, _ = _drain_timed(eng)
+    ext_p50 = float(np.percentile(np.asarray(decode_ts) * 1e6, 50))
+    ttft_p50 = m.ttft_s.percentile(50) * 1e6
+    tok_p50 = m.per_token_s.percentile(50) * 1e6
+    ratio = tok_p50 / ext_p50 if ext_p50 > 0 else float("nan")
+    row("serve_ttft_p50_us_metrics", ttft_p50,
+        f"n={m.ttft_s.count} (submit->first token, incl. queue wait)")
+    row("serve_per_token_p50_us_metrics", tok_p50,
+        f"n={m.per_token_s.count} ext_p50={ext_p50:.1f}us "
+        f"ratio={ratio:.2f} (req: 1/1.5 <= ratio <= 1.5)")
+    assert 1 / 1.5 <= ratio <= 1.5, \
+        f"metrics per-token p50 {tok_p50:.1f}us inconsistent with " \
+        f"external decode p50 {ext_p50:.1f}us (x{ratio:.2f})"
+
+
 def bench_churn(cfg, mesh, params):
     """Continuous mode: one arrival every 2 engine steps against a
     saturated 4-slot batch — admission/prefill interleaves with decode."""
@@ -120,6 +152,7 @@ def main():
     params = None
     for occ in (1, 2, 4):
         params = bench_occupancy(cfg, mesh, params, occ)
+    bench_metrics(cfg, mesh, params)
     bench_churn(cfg, mesh, params)
 
 

@@ -31,6 +31,9 @@ PINS: list[tuple[str, str]] = [
     ("fused", "grad_rs_unfused_16777216B_us"),
     ("serve", "serve_decode_p50_us_occ1"),
     ("serve", "serve_decode_p50_us_occ4"),
+    ("serve", "serve_ttft_p50_us_metrics"),
+    ("serve", "serve_per_token_p50_us_metrics"),
+    ("trace", "trace_allreduce_65536B_off"),
 ]
 
 

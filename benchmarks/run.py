@@ -88,6 +88,9 @@ BENCHES = [
     ("serve", False, _module_runner(
         "bench_serve",
         "serving engine: per-token p50/p99 + tok/s vs offered load")),
+    ("trace", False, _module_runner(
+        "bench_trace",
+        "observability: tracing-level overhead ladder + export costs")),
 ]
 
 

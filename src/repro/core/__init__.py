@@ -1,6 +1,6 @@
 """ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
 from . import (abmodel, collectives, heap, netops, pattern, profile, shmem,
-               team, topology, tuner)
+               team, topology, trace, tuner)
 from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, Schedule, Stage, as_pattern, compile_pattern
 from .profile import OpSample, Profiler
@@ -8,15 +8,16 @@ from .shmem import Ctx, ShmemContext, sim_ctx, spmd_ctx
 from .team import (Team, TeamPartition, from_active_set, make_team, split_2d,
                    split_strided, team_world)
 from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
+from .trace import Tracer
 from .tuner import TunedSelector, Tuner, TuningDB
 
 __all__ = [
     "abmodel", "collectives", "heap", "netops", "pattern", "profile",
-    "shmem", "team", "topology", "tuner",
+    "shmem", "team", "topology", "trace", "tuner",
     "NetOps", "NocSimNetOps", "SimNetOps", "SpmdNetOps", "CommPattern",
     "Schedule", "Stage", "as_pattern", "compile_pattern", "Ctx",
     "ShmemContext", "sim_ctx", "spmd_ctx", "Team", "TeamPartition",
     "from_active_set", "make_team", "split_2d", "split_strided",
     "team_world", "MeshTopology", "epiphany3", "v5e_multipod", "v5e_pod",
-    "OpSample", "Profiler", "TunedSelector", "Tuner", "TuningDB",
+    "OpSample", "Profiler", "Tracer", "TunedSelector", "Tuner", "TuningDB",
 ]

@@ -54,8 +54,10 @@ class OpSample:
 
     ``kind`` distinguishes timed collectives ("collective"), non-blocking
     RMA issues ("rma"), bare selection decisions recorded outside any
-    timed region ("selection"), and calibration measurements
-    ("measure")."""
+    timed region ("selection"), calibration measurements ("measure"),
+    quiet/fence memory-ordering points ("sync" — wall time split into
+    ``issue_s`` + ``stall_s``, DESIGN.md §16), and user spans
+    ("span")."""
 
     collective: str
     nbytes: float = 0.0
@@ -74,6 +76,9 @@ class OpSample:
     predicted_s: float = float("nan")   # alpha-beta modeled time
     traced: bool = False           # recorded under jit/shard_map staging
     fingerprint: str = ""          # tuner topology key (tuner.fingerprint)
+    issue_s: float = 0.0           # "sync" kind: time spent issuing
+    stall_s: float = 0.0           # "sync" kind: time stalled on pending ops
+    meta: dict | None = None       # free-form span annotations (trace args)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -98,13 +103,19 @@ class Profiler:
     >=2 counters + per-op timeline).  Thread-safe; the open-op stack is
     thread-local so concurrent contexts don't interleave notes."""
 
+    #: consecutive failures after which a raising sink is dropped
+    SINK_MAX_FAILURES = 3
+
     def __init__(self, level: int = 2, max_samples: int = 100_000):
         self.level = int(level)
         self.max_samples = max_samples
         self.samples: list[OpSample] = []
         self.dropped = 0
+        self.sink_errors = 0
+        self.sinks_dropped = 0
         self._counters: dict[str, dict[str, float]] = {}
         self._sinks: list[Callable[[OpSample], None]] = []
+        self._sink_fails: dict[int, int] = {}
         self._lock = threading.Lock()
         self._tls = threading.local()
         self._epoch = time.perf_counter()
@@ -130,9 +141,16 @@ class Profiler:
     def add_sink(self, fn: Callable[[OpSample], None]) -> None:
         """Stream every committed sample to `fn` (e.g. ``Tuner.observe``
         for online refinement).  Sinks run synchronously at commit, after
-        the sample is final; they see disabled-level nothing."""
+        the sample is final; they see disabled-level nothing.
+
+        A sink must never abort the instrumented op: exceptions are
+        caught and counted (``sink_errors``), and a sink that fails
+        ``SINK_MAX_FAILURES`` consecutive times is dropped
+        (``sinks_dropped``) so a broken observer cannot tax every
+        subsequent op."""
         if fn not in self._sinks:
             self._sinks.append(fn)
+            self._sink_fails[id(fn)] = 0
 
     # -- recording -----------------------------------------------------------
     def _open_stack(self) -> list[OpSample]:
@@ -208,6 +226,10 @@ class Profiler:
             s.schedule = schedule.name
             s.n_stages = len(schedule.stages)
             s.bytes_moved = float(schedule.total_bytes())
+            # the object references the tracer renders per-PE stage spans
+            # and link heatmaps from (schedules/topologies are interned;
+            # not exported by to_dict)
+            s._sched, s._topo = schedule, topo
             try:
                 s.max_link_load = max(
                     (st.pattern.max_link_load(topo)
@@ -253,7 +275,29 @@ class Profiler:
                 else:
                     self.dropped += 1
 
+    def record_sync(self, op: str, n_ops: int, nbytes: float, *,
+                    issue_s: float, stall_s: float = 0.0, n_pes: int = 0,
+                    t_start: float | None = None) -> None:
+        """One memory-ordering point (``quiet``/``fence``) with its wall
+        time split into ISSUE time (building/dispatching the completion
+        or ordering program) and STALL time (blocking until the pending
+        ops actually land) — the split that was previously folded
+        invisibly into op wall time (DESIGN.md §16)."""
+        if not self.enabled:
+            return
+        if t_start is None:
+            t_start = (time.perf_counter() - self._epoch
+                       - issue_s - stall_s)
+        s = OpSample(collective=op, kind="sync", nbytes=float(nbytes),
+                     n_pes=int(n_pes), t_start=t_start,
+                     wall_s=issue_s + stall_s, issue_s=float(issue_s),
+                     stall_s=float(stall_s), traced=not trace_clean(),
+                     meta={"n_ops": int(n_ops)})
+        self._commit(s)
+
     def _commit(self, s: OpSample) -> None:
+        if not self.enabled:    # pcontrol(0) raced the op: drop cleanly
+            return
         key = f"{s.kind}.{s.collective}" + (
             f".{s.algorithm}" if s.algorithm else "")
         with self._lock:
@@ -262,13 +306,30 @@ class Profiler:
             c["count"] += 1
             c["total_s"] += s.wall_s
             c["total_bytes"] += s.nbytes
+            if s.kind == "sync":
+                c["issue_s"] = c.get("issue_s", 0.0) + s.issue_s
+                c["stall_s"] = c.get("stall_s", 0.0) + s.stall_s
             if self.level >= 2:
                 if len(self.samples) < self.max_samples:
                     self.samples.append(s)
                 else:
                     self.dropped += 1
-        for sink in self._sinks:
-            sink(s)
+        for sink in list(self._sinks):
+            try:
+                sink(s)
+                self._sink_fails[id(sink)] = 0
+            except Exception:
+                # a sink must not abort the instrumented op: count the
+                # failure and drop the sink once it fails repeatedly
+                self.sink_errors += 1
+                fails = self._sink_fails.get(id(sink), 0) + 1
+                self._sink_fails[id(sink)] = fails
+                if fails >= self.SINK_MAX_FAILURES:
+                    try:
+                        self._sinks.remove(sink)
+                    except ValueError:
+                        pass
+                    self.sinks_dropped += 1
 
     # -- export --------------------------------------------------------------
     def counters(self) -> dict[str, dict[str, float]]:
@@ -284,6 +345,8 @@ class Profiler:
             "schema": 1,
             "level": self.level,
             "dropped": self.dropped,
+            "sink_errors": self.sink_errors,
+            "sinks_dropped": self.sinks_dropped,
             "counters": self.counters(),
             "timeline": self.timeline(),
         }

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -37,7 +38,7 @@ from . import team as team_mod
 from . import tuner as tuner_mod
 from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, PatternLike, as_pattern
-from .profile import Profiler
+from .profile import Profiler, trace_clean
 from .topology import MeshTopology
 
 _NULL_CM = contextlib.nullcontext()
@@ -166,6 +167,12 @@ class Ctx:
         fs = list(futures) or self._pending
         if not fs:
             return ()
+        prof = self.shmem.profile
+        # Stall-vs-issue split (DESIGN.md §16): only meaningful outside a
+        # trace (eager SIM), where block_until_ready IS the semantic
+        # shmem_quiet wait for the pending transfers to land.
+        timed = prof is not None and prof.enabled and trace_clean()
+        t0 = time.perf_counter() if timed else 0.0
         alien = [f for f in fs if not f._done and f not in self._pending]
         if alien:
             raise ValueError(
@@ -173,15 +180,21 @@ class Ctx:
                 "per-context isolation means each context drains its own "
                 "queue; call that context's quiet()")
         fs = sorted(fs, key=lambda f: f.seq)     # completion in issue order
-        prof = self.shmem.profile
+        nb = sum(f.nbytes for f in fs)
         if prof is not None and prof.enabled:
-            prof.count("quiet.drained", len(fs),
-                       sum(f.nbytes for f in fs))
+            prof.count("quiet.drained", len(fs), nb)
         vals = [f.value for f in fs]
         fenced = lax.optimization_barrier(tuple(vals))
         for f, v in zip(fs, fenced):
             f.value, f._done = v, True
         self._pending = [f for f in self._pending if not f._done]
+        if timed:
+            t1 = time.perf_counter()
+            jax.block_until_ready(fenced)
+            t2 = time.perf_counter()
+            prof.record_sync("quiet", len(fs), nb, issue_s=t1 - t0,
+                             stall_s=t2 - t1, n_pes=self.n_pes,
+                             t_start=t0 - prof._epoch)
         return fenced
 
     def fence(self):
@@ -197,6 +210,9 @@ class Ctx:
         values; () when the queue is empty."""
         if not self._pending:
             return ()
+        prof = self.shmem.profile
+        timed = prof is not None and prof.enabled and trace_clean()
+        t0 = time.perf_counter() if timed else 0.0
         last_for_pe: dict[int, Future] = {}
         for f in sorted(self._pending, key=lambda x: x.seq):
             targets = f.target_pes() or tuple(range(self.n_pes))
@@ -211,6 +227,13 @@ class Ctx:
                 f.value = chained[0]
             for pe in targets:
                 last_for_pe[pe] = f
+        if timed:
+            # fence orders but never completes: all issue, zero stall
+            prof.record_sync("fence", len(self._pending),
+                             sum(f.nbytes for f in self._pending),
+                             issue_s=time.perf_counter() - t0,
+                             stall_s=0.0, n_pes=self.n_pes,
+                             t_start=t0 - prof._epoch)
         return tuple(f.value for f in self._pending)
 
 

@@ -111,6 +111,14 @@ def main(argv=None):
     ap.add_argument("--profile-out", default="",
                     help="attach the runtime profiler and dump its "
                          "counters+timeline JSON here at exit")
+    ap.add_argument("--trace-out", default="",
+                    help="attach the distributed tracer (DESIGN §16) and "
+                         "dump a Chrome trace-event JSON here at exit "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="record serving metrics (TTFT/per-token "
+                         "histograms, queue/KV gauges, wire bytes) and "
+                         "dump the registry JSON here at exit")
     args = ap.parse_args(argv)
 
     from ..configs import get_config, smoke_config
@@ -130,9 +138,21 @@ def main(argv=None):
 
     from ..serve.engine import ServeEngine
     profiler = None
-    if args.profile_out:
+    if args.trace_out:
+        # one object serves both sinks: Tracer IS-A Profiler, so
+        # --profile-out (counters+timeline) and --trace-out (Chrome
+        # trace) can share it
+        from ..core.trace import LEVEL_FULL, Tracer
+        profiler = Tracer(level=LEVEL_FULL)
+    elif args.profile_out:
         from ..core.profile import Profiler
         profiler = Profiler(level=2)
+    metrics = None
+    if args.metrics_out:
+        from ..serve.metrics import ServeMetrics
+        metrics = ServeMetrics()
+        if profiler is not None:
+            metrics.attach(profiler)
     tuner = None
     if args.autotune or args.tuning_db:
         from ..core import tuner as tuner_mod
@@ -146,7 +166,8 @@ def main(argv=None):
         cfg, mesh, max_slots=slots, page_size=args.page_size,
         max_seq=max_seq, prompt_bucket=min(bucket, max_seq),
         kv_heap_bytes=args.kv_heap_bytes or None, backend=args.comm,
-        tuner=(tuner if args.autotune else None), profile=profiler)
+        tuner=(tuner if args.autotune else None), profile=profiler,
+        metrics=metrics)
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(1, cfg.vocab, size=(n_req, args.prompt_len),
@@ -176,9 +197,19 @@ def main(argv=None):
         tuner.save(args.tuning_db)
         print(f"[serve] tuning DB ({len(tuner.db)} points) saved to "
               f"{args.tuning_db}")
-    if profiler is not None:
+    if profiler is not None and args.profile_out:
         profiler.dump(args.profile_out)
         print(f"[serve] profile dumped to {args.profile_out}")
+    if args.trace_out:
+        profiler.dump_chrome(args.trace_out)
+        print(f"[serve] Chrome trace ({len(profiler._events)} events) "
+              f"written to {args.trace_out} — open in ui.perfetto.dev")
+    if metrics is not None:
+        metrics.dump(args.metrics_out)
+        h = metrics.ttft_s
+        print(f"[serve] metrics written to {args.metrics_out} "
+              f"(ttft p50={h.percentile(50) * 1e3:.1f}ms, per-token "
+              f"p50={metrics.per_token_s.percentile(50) * 1e3:.2f}ms)")
     return gen
 
 

@@ -71,6 +71,13 @@ def main(argv=None):
                     help="attach the pcontrol-style runtime profiler and "
                          "dump its JSON (counters + per-op/step timeline) "
                          "to this path at exit (DESIGN §13)")
+    ap.add_argument("--trace-out", default="",
+                    help="attach the distributed tracer (DESIGN §16) and "
+                         "dump a Chrome trace-event JSON here at exit "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="record per-step wall-time histogram + loss "
+                         "gauge and dump the registry JSON here at exit")
     ap.add_argument("--remat", default=None,
                     choices=[None, "none", "full", "selective"],
                     help="override the config remat policy (§Perf P5)")
@@ -140,9 +147,16 @@ def main(argv=None):
                   "to state the data-axis layout explicitly")
             embedding = None
         profiler = None
-        if args.profile_out:
+        if args.trace_out:
+            from ..core.trace import LEVEL_FULL, Tracer
+            profiler = Tracer(level=LEVEL_FULL)
+        elif args.profile_out:
             from ..core.profile import Profiler
             profiler = Profiler(level=2)
+        metrics = None
+        if args.metrics_out:
+            from ..serve.metrics import MetricsRegistry
+            metrics = MetricsRegistry()
         tuner = None
         if args.autotune or args.tuning_db:
             from ..core import sim_ctx
@@ -204,6 +218,11 @@ def main(argv=None):
                 loss, params, opt_state = step_fn(params, opt_state, batch)
                 loss = float(loss)        # sync: the sample times the step
             losses.append(loss)
+            if metrics is not None:
+                metrics.histogram("train.step_s",
+                                  "full train step wall time").observe(
+                    time.time() - t0)
+                metrics.gauge("train.loss", "last step loss").set(loss)
             print(f"[train] step {step:5d} loss {loss:8.4f} "
                   f"({time.time() - t0:.2f}s)")
             if ft:
@@ -216,9 +235,18 @@ def main(argv=None):
             tuner.save(args.tuning_db)
             print(f"[train] tuning DB ({len(tuner.db)} points) saved to "
                   f"{args.tuning_db}")
-        if profiler is not None:
+        if profiler is not None and args.profile_out:
             profiler.dump(args.profile_out)
             print(f"[train] profile dumped to {args.profile_out}")
+        if args.trace_out:
+            profiler.dump_chrome(args.trace_out)
+            print(f"[train] Chrome trace ({len(profiler._events)} events) "
+                  f"written to {args.trace_out} — open in ui.perfetto.dev")
+        if metrics is not None:
+            metrics.counter("train.steps", "steps executed").inc(
+                len(losses))
+            metrics.dump(args.metrics_out)
+            print(f"[train] metrics written to {args.metrics_out}")
         assert np.isfinite(losses).all(), "NaN/inf loss"
         if len(losses) >= 10:
             a, b = np.mean(losses[:3]), np.mean(losses[-3:])

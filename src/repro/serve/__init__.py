@@ -11,4 +11,8 @@ def __getattr__(name):
     if name in ("ServeEngine", "Scheduler", "Request", "SlotState"):
         from . import engine
         return getattr(engine, name)
+    if name in ("MetricsRegistry", "ServeMetrics", "Counter", "Gauge",
+                "Histogram"):
+        from . import metrics
+        return getattr(metrics, name)
     raise AttributeError(name)

@@ -29,7 +29,9 @@ the engine prices and records every per-step collective (DESIGN.md §13).
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
@@ -146,8 +148,8 @@ class ServeEngine:
                  prompt_bucket: int = 32, kv_heap_bytes: int | None = None,
                  backend: str = "shmem", allreduce_algo: str = "paper",
                  topo=None, link=None, embedding=None, tuner=None,
-                 profile=None, eos_id: int | None = None, init_key: int = 0,
-                 capture_logits: bool = False):
+                 profile=None, metrics=None, eos_id: int | None = None,
+                 init_key: int = 0, capture_logits: bool = False):
         import dataclasses as dc
 
         import jax
@@ -199,6 +201,14 @@ class ServeEngine:
         self.results: dict[int, np.ndarray] = {}
         self.logits_trace: dict[int, list] = {}
         self.steps = 0
+        # observability (DESIGN.md §16): a ServeMetrics records the
+        # request lifecycle; when `profile` is a Tracer, each request
+        # additionally becomes an async track with enqueue/admit/
+        # first-token instants.  Both default to None == zero cost.
+        self.profile = profile
+        self.metrics = metrics
+        from ..core.trace import Tracer
+        self._trace = profile if isinstance(profile, Tracer) else None
 
         axes = build.axis_spec(mesh)
         comm_kw = dict(allreduce_algo=allreduce_algo, topo=topo, link=link,
@@ -251,12 +261,39 @@ class ServeEngine:
                 (pspecs, poolspecs, P(), P(), P()),
                 (P(), lg_spec, poolspecs)))
 
+    # -- observability helpers ------------------------------------------------
+    def _span(self, name: str, **meta):
+        """Nested tracer span, bare profiler op, or nothing — the whole
+        disabled cost is this attribute test."""
+        if self._trace is not None and self._trace.enabled:
+            return self._trace.span(name, **meta)
+        if self.profile is not None and self.profile.enabled:
+            return self.profile.op(name, kind="span")
+        return contextlib.nullcontext()
+
+    def _req_event(self, kind: str, rid: int, **args) -> None:
+        """Request-lifecycle edge on the tracer's async request track."""
+        t = self._trace
+        if t is None or not t.enabled:
+            return
+        if kind == "enqueue":
+            t.begin_async("request", rid, f"req {rid}", **args)
+        elif kind == "evict":
+            t.end_async("request", rid, f"req {rid}", **args)
+        else:
+            t.instant_async("request", rid, kind, **args)
+
     # -- client API -----------------------------------------------------------
     def submit(self, prompt, max_new: int) -> int:
         if len(np.asarray(prompt).reshape(-1)) > self.prompt_bucket:
             raise ValueError(
                 f"prompt longer than prompt_bucket={self.prompt_bucket}")
-        return self.scheduler.submit(prompt, max_new)
+        rid = self.scheduler.submit(prompt, max_new)
+        if self.metrics is not None:
+            self.metrics.on_submit(rid)
+        self._req_event("enqueue", rid, prompt_len=len(
+            np.asarray(prompt).reshape(-1)), max_new=int(max_new))
+        return rid
 
     def _emit(self, st: SlotState, tok: int, lg=None) -> None:
         st.out.append(int(tok))
@@ -273,14 +310,28 @@ class ServeEngine:
         "decoded": n_active}."""
         jnp = self._jnp
         sched = self.scheduler
-        with self._jax.set_mesh(self.mesh):
+        metrics = self.metrics
+        with self._jax.set_mesh(self.mesh), \
+                self._span("serve.step", n_pes=0):
             evicted = []
             for slot, st in sched.step_evict():
                 self.results[st.rid] = np.asarray(st.out, np.int32)
                 evicted.append(st.rid)
+                if metrics is not None:
+                    metrics.on_evict(st.rid)
+                self._req_event("evict", st.rid, n_tokens=len(st.out))
 
             admitted = []
-            for slot, st in sched.step_admit():
+            admits = sched.step_admit()
+            if metrics is not None and sched.queue \
+                    and any(s is None for s in sched.slots):
+                # free slot + waiting head = page backpressure, the only
+                # reason FIFO admission stalls (DESIGN.md §15)
+                metrics.on_backpressure()
+            for slot, st in admits:
+                if metrics is not None:
+                    metrics.on_admit(st.rid)
+                self._req_event("admit", st.rid, slot=slot)
                 Lb = self.prompt_bucket
                 toks = np.zeros((1, Lb), np.int32)
                 toks[0, :len(st.prompt)] = st.prompt
@@ -288,12 +339,17 @@ class ServeEngine:
                     jnp.arange(Lb, dtype=jnp.int32)[None], (1, Lb))
                 trow = jnp.asarray(self.kv.table[slot:slot + 1])
                 last = jnp.asarray([len(st.prompt) - 1], jnp.int32)
-                tok, lg, self.pool = self._pjit(
-                    self.params, self.pool, trow, jnp.asarray(toks),
-                    positions, last)
-                self._emit(st, np.asarray(tok)[0],
+                with self._span("serve.prefill", nbytes=float(Lb * 4)):
+                    tok, lg, self.pool = self._pjit(
+                        self.params, self.pool, trow, jnp.asarray(toks),
+                        positions, last)
+                    tok = np.asarray(tok)      # force sync: first token
+                self._emit(st, tok[0],
                            np.asarray(lg)[0] if self.capture_logits
                            else None)
+                if metrics is not None:
+                    metrics.on_first_token(st.rid)
+                self._req_event("first_token", st.rid)
                 admitted.append(st.rid)
 
             active = sched.active_slots()
@@ -304,10 +360,15 @@ class ServeEngine:
                     st = sched.slots[i]
                     toks[i, 0] = st.out[-1]
                     poss[i] = st.pos
-                tok, lg, self.pool = self._djit(
-                    self.params, self.pool, jnp.asarray(self.kv.table),
-                    jnp.asarray(toks), jnp.asarray(poss))
-                tok = np.asarray(tok)
+                t0 = time.perf_counter()
+                with self._span("serve.decode", n_pes=len(active)):
+                    tok, lg, self.pool = self._djit(
+                        self.params, self.pool, jnp.asarray(self.kv.table),
+                        jnp.asarray(toks), jnp.asarray(poss))
+                    tok = np.asarray(tok)      # force sync: step complete
+                if metrics is not None:
+                    metrics.on_decode_step(len(active),
+                                           time.perf_counter() - t0)
                 lg = np.asarray(lg) if self.capture_logits else None
                 for i in active:
                     st = sched.slots[i]
@@ -315,6 +376,8 @@ class ServeEngine:
                     self._emit(st, tok[i],
                                lg[i] if self.capture_logits else None)
         self.steps += 1
+        if metrics is not None:
+            metrics.sample_engine(self)
         return {"evicted": evicted, "admitted": admitted,
                 "decoded": len(active)}
 
@@ -327,4 +390,7 @@ class ServeEngine:
         # final evict pass so the last finishers land in results
         for slot, st in self.scheduler.step_evict():
             self.results[st.rid] = np.asarray(st.out, np.int32)
+            if self.metrics is not None:
+                self.metrics.on_evict(st.rid)
+            self._req_event("evict", st.rid, n_tokens=len(st.out))
         return self.results

@@ -82,6 +82,20 @@ class PagePool:
     def live_pages(self) -> int:
         return len(self._live)
 
+    def occupancy(self) -> float:
+        """Fraction of allocatable pages currently live (null page
+        excluded from the denominator) — the serve-metrics KV gauge."""
+        cap = self.num_pages - (1 if self.null_page is not None else 0)
+        return len(self._live) / cap if cap > 0 else 0.0
+
+    def fragmentation(self) -> float:
+        """Fraction of the available pages that sit on the recycle list
+        rather than in unbacked brk headroom.  High values mean the pool
+        is serving from churned pages (LIFO reuse working as intended);
+        0.0 means a fresh or fully drained pool."""
+        avail = self.pages_available()
+        return len(self._free) / avail if avail > 0 else 0.0
+
     # -- alloc/free ----------------------------------------------------------
     def _grow(self) -> int:
         try:

@@ -1,0 +1,4 @@
+"""Operator-facing command-line tools (DESIGN.md §16).
+
+  python -m repro.tools.tracereport TRACE.json [--metrics M.json]
+"""

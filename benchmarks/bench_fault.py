@@ -1,0 +1,141 @@
+"""Fault-tolerance cost ladder (DESIGN.md §17): what the elastic
+runtime charges the train loop, measured at pinned grid points.
+
+  1. Checkpoint-overlap overhead vs a synchronous save at 16MB of
+     train state on a 16-PE SIM mesh: the stall ``manager.save`` imposes
+     inline vs the stall ``PgasCheckpointer.begin`` imposes (the stream
+     issues on the dedicated context's worker and completes only at the
+     epoch-boundary ``drain()``).  The acceptance pin: begin < 10% of
+     the sync stall.  ``drain`` wall time is reported for context — it
+     sits at the epoch boundary, off the per-step critical path.
+  2. Recovery time: the elastic restart protocol
+     (degrade -> refingerprint -> restore) on a 16-PE checkpoint, and
+     recovery-plus-replay cost as a function of checkpoint interval
+     (a longer interval loses more steps to replay — the classic
+     interval/overhead trade).
+
+  PYTHONPATH=src python -m benchmarks.bench_fault
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import manager
+from repro.ckpt.pgas import PgasCheckpointer
+from repro.core import sim_ctx
+from repro.core.elastic import recover
+from repro.core.topology import epiphany3
+
+TOPO = epiphany3()
+N = TOPO.n_pes
+NBYTES = 16 << 20                    # the pinned grid point: 16MB state
+ROWS: list[tuple] = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _state(nbytes: int):
+    w = np.random.RandomState(0).randn(
+        N, max(1, nbytes // (N * 4))).astype(np.float32)
+    return {"w": jnp.asarray(w)}
+
+
+def ckpt_overlap() -> None:
+    state = _state(NBYTES)
+    iters = 5
+    with tempfile.TemporaryDirectory() as d:
+        for i in range(2):                       # warm the page cache
+            manager.save(d, i, state)
+        t0 = time.perf_counter()
+        for i in range(iters):
+            manager.save(d, i, state)
+        sync_us = (time.perf_counter() - t0) / iters * 1e6
+        row(f"ckpt_sync_save_{NBYTES}B", sync_us,
+            f"{NBYTES / 1e6 / (sync_us / 1e6):.0f}MB/s inline stall")
+
+        ck = PgasCheckpointer(sim_ctx(N, TOPO), d)
+        ck.begin(0, state)
+        ck.drain()                               # warm
+        begins, drains = [], []
+        for i in range(iters):
+            t0 = time.perf_counter()
+            ck.begin(i, state)
+            begins.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            ck.drain()
+            drains.append(time.perf_counter() - t0)
+        begin_us = min(begins) * 1e6
+        frac = begin_us / sync_us * 100.0
+        row(f"ckpt_pgas_begin_{NBYTES}B", begin_us,
+            f"{frac:.1f}% of sync stall (acceptance: <10%)")
+        row(f"ckpt_pgas_drain_{NBYTES}B", min(drains) * 1e6,
+            "epoch-boundary completion, off the critical path")
+        assert frac < 10.0, \
+            f"async PGAS begin costs {frac:.1f}% of the sync stall"
+
+
+def recovery() -> None:
+    # the protocol alone: degrade + refingerprint + restore of a 1MB
+    # 16-PE checkpoint after PE 5 dies
+    state = _state(1 << 20)
+    with tempfile.TemporaryDirectory() as d:
+        manager.save(d, 7, state)
+        ctx = sim_ctx(N, TOPO)
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            step, _, dm = recover(ctx, [5], d, state)
+            times.append(time.perf_counter() - t0)
+        row("recovery_restore_16pe_1MB", min(times) * 1e6,
+            f"degrade+refingerprint+restore, n_live={dm.n_live}")
+
+
+def _toy_step(ctx, w, lr=0.05):
+    g = ctx.to_all(w, "sum") / ctx.n_pes
+    return w - lr * g
+
+
+def recovery_vs_interval() -> None:
+    """Kill at a fixed step; recovery cost = protocol + replay of the
+    steps since the last checkpoint — the interval trade the operator
+    tunes ``--ckpt-every`` against."""
+    kill_step = 11
+    w0 = jnp.asarray(np.random.RandomState(1)
+                     .randn(N, 4096).astype(np.float32))
+    for every in (2, 8):
+        ctx = sim_ctx(N, TOPO)
+        with tempfile.TemporaryDirectory() as d:
+            ck = PgasCheckpointer(ctx, d, async_issue=False)
+            w = w0
+            for step in range(kill_step):
+                if step % every == 0:
+                    ck.begin(step, {"w": w})
+                w = _toy_step(ctx, w)
+            ck.drain()
+            # PE 5 dies at kill_step: recover, then replay to catch up
+            t0 = time.perf_counter()
+            step, state, dm = recover(ctx, [5], d, {"w": w0})
+            w = state["w"]
+            for _ in range(step, kill_step):
+                w = _toy_step(ctx, w)
+            wall = time.perf_counter() - t0
+            row(f"recovery_interval_{every}", wall * 1e6,
+                f"replayed {kill_step - step} lost steps "
+                f"(last ckpt step {step})")
+
+
+def main():
+    ckpt_overlap()
+    recovery()
+    recovery_vs_interval()
+
+
+if __name__ == "__main__":
+    main()

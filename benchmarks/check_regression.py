@@ -34,6 +34,8 @@ PINS: list[tuple[str, str]] = [
     ("serve", "serve_ttft_p50_us_metrics"),
     ("serve", "serve_per_token_p50_us_metrics"),
     ("trace", "trace_allreduce_65536B_off"),
+    ("fault", "ckpt_sync_save_16777216B"),
+    ("fault", "recovery_restore_16pe_1MB"),
 ]
 
 

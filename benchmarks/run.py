@@ -91,6 +91,9 @@ BENCHES = [
     ("trace", False, _module_runner(
         "bench_trace",
         "observability: tracing-level overhead ladder + export costs")),
+    ("fault", False, _module_runner(
+        "bench_fault",
+        "fault tolerance: async-ckpt overlap overhead + recovery time")),
 ]
 
 

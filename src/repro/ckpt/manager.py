@@ -1,6 +1,6 @@
 """Sharded checkpointing + fault tolerance + elastic re-sharding.
 
-Design (DESIGN.md §8), numpy-based (no orbax dependency):
+Design (DESIGN.md §8, §17), numpy-based (no orbax dependency):
 
   * save(): each param/opt leaf is written as a .npy under a temp dir,
     then atomically renamed into place — a crash mid-save never corrupts
@@ -9,8 +9,17 @@ Design (DESIGN.md §8), numpy-based (no orbax dependency):
   * restore(): loads into the CURRENT mesh; if the mesh changed (elastic
     shrink/grow after node failure) leaves are resharded host-side from
     the saved global arrays (save always materializes global views).
+    Corruption surfaces as a typed :class:`CheckpointError` — a LATEST
+    pointer at a deleted/partial dir falls back to the newest COMPLETE
+    ``step-*`` dir, and a missing leaf name says which leaf, never a
+    bare KeyError/FileNotFoundError.
   * FaultToleranceManager: step-deadline straggler detection (deterministic
-    simulation hook on CPU), periodic async save, auto-resume.
+    simulation hook on CPU), periodic async save, auto-resume.  Async
+    saves snapshot device state to HOST before the thread spawns, so
+    train steps mutating state mid-save cannot corrupt the checkpoint.
+  * For checkpointing that overlaps the train step on the PGAS substrate
+    itself (put_nbi streaming on a dedicated context), see
+    :mod:`repro.ckpt.pgas`.
 """
 from __future__ import annotations
 
@@ -25,6 +34,12 @@ from typing import Any, Callable
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be resolved or is structurally incomplete
+    (no complete step dir, dangling LATEST with no fallback, a manifest
+    leaf the template needs that the checkpoint lacks)."""
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -65,12 +80,52 @@ def save(ckpt_dir: str | pathlib.Path, step: int, state: dict,
     return final
 
 
+def _is_complete(d: pathlib.Path) -> bool:
+    """A step dir is COMPLETE when its manifest parses and every leaf
+    file it names exists — a crash between leaf writes and the rename
+    leaves only a tmp-* dir, but a crash between rename and LATEST (or a
+    partial copy) can leave a step dir worth rejecting."""
+    mf = d / "manifest.json"
+    if not mf.exists():
+        return False
+    try:
+        manifest = json.loads(mf.read_text())
+    except (json.JSONDecodeError, OSError):
+        return False
+    return all((d / l["file"]).exists() for l in manifest.get("leaves", []))
+
+
+def _complete_steps(ckpt_dir: pathlib.Path) -> list[pathlib.Path]:
+    """All complete step-* dirs, newest first."""
+    return sorted((d for d in ckpt_dir.glob("step-*")
+                   if d.is_dir() and _is_complete(d)),
+                  key=lambda d: d.name, reverse=True)
+
+
+def _resolve_dir(ckpt_dir: str | pathlib.Path) -> pathlib.Path:
+    """The step dir to restore from: LATEST when it points at a complete
+    dir, else the newest complete ``step-*`` fallback (a crashed save or
+    deleted dir leaves LATEST dangling); :class:`CheckpointError` when
+    nothing complete exists."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    p = ckpt_dir / "LATEST"
+    if p.exists():
+        d = ckpt_dir / p.read_text().strip()
+        if _is_complete(d):
+            return d
+    fallback = _complete_steps(ckpt_dir)
+    if fallback:
+        return fallback[0]
+    raise CheckpointError(
+        f"no complete checkpoint under {ckpt_dir}: LATEST is "
+        f"{'dangling or partial' if p.exists() else 'absent'} and no "
+        f"complete step-* dir exists to fall back to")
+
+
 def latest_step(ckpt_dir: str | pathlib.Path) -> int | None:
-    p = pathlib.Path(ckpt_dir) / "LATEST"
-    if not p.exists():
-        return None
-    d = pathlib.Path(ckpt_dir) / p.read_text().strip()
-    if not (d / "manifest.json").exists():
+    try:
+        d = _resolve_dir(ckpt_dir)
+    except CheckpointError:
         return None
     return json.loads((d / "manifest.json").read_text())["step"]
 
@@ -81,10 +136,12 @@ def restore(ckpt_dir: str | pathlib.Path, template: dict,
     ShapeDtypeStructs or arrays (GLOBAL shapes); `shardings` optional
     matching tree of NamedSharding for device placement.  Elastic
     re-sharding falls out for free: saved arrays are global, jax.device_put
-    splits them under the current mesh whatever its shape."""
-    ckpt_dir = pathlib.Path(ckpt_dir)
-    name = (ckpt_dir / "LATEST").read_text().strip()
-    d = ckpt_dir / name
+    splits them under the current mesh whatever its shape.
+
+    Raises :class:`CheckpointError` (never a bare KeyError or
+    FileNotFoundError) when no complete checkpoint exists or the resolved
+    checkpoint lacks a leaf the template names."""
+    d = _resolve_dir(ckpt_dir)
     manifest = json.loads((d / "manifest.json").read_text())
     by_name = {l["name"]: l for l in manifest["leaves"]}
 
@@ -94,7 +151,13 @@ def restore(ckpt_dir: str | pathlib.Path, template: dict,
                     if shardings is not None else [None] * len(leaves_t))
     out = []
     for n, t, s in zip(names, leaves_t, shard_leaves):
-        rec = by_name[n]
+        rec = by_name.get(n)
+        if rec is None:
+            have = ", ".join(sorted(by_name)[:8])
+            raise CheckpointError(
+                f"checkpoint {d.name} has no leaf {n!r} (template and "
+                f"checkpoint disagree on state structure; checkpoint "
+                f"holds: {have}{', ...' if len(by_name) > 8 else ''})")
         arr = np.load(d / rec["file"])
         if tuple(arr.shape) != tuple(t.shape):
             arr = _reshard(arr, tuple(t.shape), n)
@@ -148,7 +211,12 @@ class FaultToleranceManager:
             # the elastic path (drop node, shrink data axis, resume)
             self.stragglers.append({"step": step, "stall_s": dt})
         if step > 0 and step % self.save_every == 0:
-            state = state_fn()
+            # Snapshot to HOST before any thread exists: the train loop
+            # donates/overwrites device buffers on the very next step,
+            # and numpy leaves are mutated in place by test harnesses —
+            # np.array(device_get(...)) pins the values this save means.
+            state = jax.tree.map(
+                lambda l: np.array(jax.device_get(l)), state_fn())
             if self.async_save:
                 self._join()
                 self._pending = threading.Thread(

@@ -1,0 +1,201 @@
+"""Async checkpointing ON the PGAS substrate (DESIGN.md §17).
+
+The thread-based async save in :mod:`repro.ckpt.manager` is a host-side
+workaround; the substrate the paper defines (arXiv:1608.03545 §3.2's
+symmetric heap + arXiv:1604.04205's inter-processor DMA) already has the
+right machinery: non-blocking ``put_nbi`` on a DEDICATED communication
+context (``shmem_ctx_create``), ordered by the pending-op engine and
+completed by ``ctx.quiet()`` only at the epoch boundary.
+
+:class:`PgasCheckpointer` streams every PE's shard of the train state to
+a gather PE as a chain of ring rotations (patterns need unique
+destinations, so a direct all-to-one fan-in is illegal — the same
+fcollect-style rotation the collectives use), overlapping the stream
+with subsequent train steps:
+
+    ck.begin(step, state)      # hand the descriptor chain to the engine
+    ... more train steps ...   # the 'DMA engine' moves shards
+    ck.drain()                 # epoch boundary: ctx.quiet() + write
+
+Two overlap mechanisms compose:
+
+  * per-context isolation (DESIGN.md §11): the rotations ride a PRIVATE
+    context, so the train step's own collectives and quiet() calls never
+    drain (or stall behind) checkpoint traffic;
+  * asynchronous issue (``async_issue=True``, the default): ``begin()``
+    only records the descriptor chain and wakes a dedicated worker
+    thread — the SIM analogue of the e-DMA engine walking a descriptor
+    list after one doorbell write.  The worker's eager XLA dispatches
+    release the GIL, so the rotations execute concurrently with the
+    train step's own device work; ``begin()`` itself costs microseconds
+    (the <10% -of-sync-stall acceptance pin in ``bench_fault.py``).
+    ``async_issue=False`` issues on the caller's thread — deterministic
+    interleaving for the fault-injection tests.
+
+SIM-oriented, like ``Tuner.tune``: leaves carry the leading PE axis and
+the gather PE's rows are reconstructed host-side into global arrays at
+drain, then written through the atomic :func:`repro.ckpt.manager.save`.
+Leaves without a leading PE axis are treated as replicated, host-copied
+at ``begin()`` (so later in-place mutation cannot corrupt the stream)
+and written directly.
+
+Fault semantics: the worker issues through the same ``Ctx.put_nbi``
+retry/backoff engine as any other RMA, so injected link drops retry with
+backoff and a dead PE raises :class:`~repro.core.fault.PEFailure` — the
+error is captured by the in-flight task and re-raised at :meth:`drain`,
+the stream's completion point.
+"""
+from __future__ import annotations
+
+import pathlib
+import threading
+
+import jax
+import numpy as np
+
+from . import manager
+
+
+class PgasCheckpointer:
+    """Overlapped checkpoint stream on a dedicated PGAS context.
+
+    shmem       : the :class:`~repro.core.shmem.ShmemContext` (SIM/NoC-SIM)
+    ckpt_dir    : where :func:`repro.ckpt.manager.save` lands the result
+    gather_pe   : the PE whose symmetric-heap region accumulates shards
+    order       : ring order for the rotations (default: the topology's
+                  snake embedding, so every rotation hop is one mesh hop)
+    async_issue : True (default) issues the rotations on a dedicated
+                  worker thread so ``begin()`` returns immediately;
+                  False issues inline on the caller's thread
+    """
+
+    def __init__(self, shmem, ckpt_dir, gather_pe: int = 0, order=None,
+                 async_issue: bool = True):
+        self.shmem = shmem
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.gather_pe = int(gather_pe)
+        self.async_issue = bool(async_issue)
+        n = shmem.n_pes
+        if order is None:
+            topo = shmem.topo
+            order = (topo.snake_order()
+                     if topo is not None
+                     and getattr(topo, "n_pes", None) == n
+                     else tuple(range(n)))
+        self.order = tuple(int(p) for p in order)
+        if sorted(self.order) != list(range(n)):
+            raise ValueError(f"order must be a permutation of 0..{n - 1}")
+        # the dedicated context: checkpoint traffic gets its own pending
+        # queue, invisible to the train step's quiet()/fence()
+        self.ctx = shmem.ctx_create()
+        self.fwd = self.ctx.compile(
+            [(self.order[i], self.order[(i + 1) % n]) for i in range(n)])
+        self._inflight = None
+        self._worker: threading.Thread | None = None
+        self._issued: dict[str, tuple] | None = None
+        self._error: BaseException | None = None
+
+    @property
+    def pending(self) -> int:
+        """Outstanding checkpoint rotations not yet completed — the
+        dedicated context's pending-op queue depth."""
+        return self.ctx.pending_count
+
+    @property
+    def in_flight(self) -> bool:
+        """A begun checkpoint stream has not been drained yet."""
+        return self._inflight is not None
+
+    # -- the descriptor-chain walk (runs on the worker when async) -----------
+    def _issue_all(self, work: list[tuple[str, object]]) -> None:
+        n = self.shmem.n_pes
+        try:
+            out: dict[str, tuple] = {}
+            for name, arr in work:
+                cur, futs = arr, []
+                for _ in range(1, n):
+                    f = self.ctx.put_nbi(cur, self.fwd)
+                    cur = f.value          # chained: rotation k feeds k+1
+                    futs.append(f)
+                out[name] = (arr, futs)
+            self._issued = out
+        except BaseException as e:          # surfaces at drain()
+            self._error = e
+
+    def _join_issue(self) -> dict[str, tuple]:
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            self._inflight = None
+            raise err
+        issued, self._issued = self._issued, None
+        return issued or {}
+
+    def begin(self, step: int, state, meta: dict | None = None) -> int:
+        """Queue the checkpoint stream for `state` WITHOUT completing it
+        — returns immediately with the number of rotations the stream
+        will issue.  A previous in-flight checkpoint is drained first (at
+        most one epoch of overlap, like double-buffered DMA
+        descriptors)."""
+        if self._inflight is not None:
+            self.drain()
+        n = self.shmem.n_pes
+        work: list[tuple[str, object]] = []
+        replicated: list[tuple[str, np.ndarray]] = []
+        for name, leaf in manager._leaf_paths(state):
+            shp = getattr(leaf, "shape", ())
+            if len(shp) >= 1 and shp[0] == n:
+                work.append((name, leaf))
+            else:
+                replicated.append(
+                    (name, np.array(jax.device_get(leaf))))
+        self._inflight = (int(step), replicated, meta)
+        if self.async_issue:
+            self._worker = threading.Thread(
+                target=self._issue_all, args=(work,), daemon=False)
+            self._worker.start()
+        else:
+            self._issue_all(work)
+        prof = getattr(self.shmem, "_active_profile", lambda: None)()
+        if prof is not None:
+            prof.count("ckpt.pgas_begin", 1)
+        return len(work) * (n - 1)
+
+    def drain(self) -> pathlib.Path | None:
+        """Epoch boundary: join the issue worker, ``ctx.quiet()`` the
+        dedicated context (the ONLY completion point of the stream),
+        reconstruct the global arrays from the gather PE's accumulated
+        rows, and write them through the atomic :func:`manager.save`.
+        Returns the checkpoint path, or None when nothing is in flight.
+        A fault captured by the stream (dead PE, unhealable link)
+        re-raises here — the completion point."""
+        if self._inflight is None:
+            return None
+        rotations = self._join_issue()
+        step, replicated, meta = self._inflight
+        self._inflight = None
+        self.ctx.quiet()
+        n = self.shmem.n_pes
+        gp = self.gather_pe
+        gi = self.order.index(gp)
+        flat: dict[str, np.ndarray] = {}
+        for name, (own, futs) in rotations.items():
+            host_own = np.asarray(jax.device_get(own))
+            out = np.empty_like(host_own)
+            out[gp] = host_own[gp]                  # k=0: own shard
+            for k, f in enumerate(futs, start=1):
+                src = self.order[(gi - k) % n]      # k hops behind on ring
+                out[src] = np.asarray(jax.device_get(f.value))[gp]
+            flat[name] = out
+        for name, arr in replicated:
+            flat[name] = arr
+        prof = getattr(self.shmem, "_active_profile", lambda: None)()
+        if prof is not None:
+            prof.count("ckpt.pgas_drain", 1,
+                       float(sum(a.nbytes for a in flat.values())))
+        return manager.save(self.ckpt_dir, step, flat, extra_meta=meta)
+
+
+__all__ = ["PgasCheckpointer"]

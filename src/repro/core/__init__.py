@@ -1,10 +1,13 @@
 """ShmemJAX core: the paper's OpenSHMEM library re-targeted to TPU meshes."""
-from . import (abmodel, collectives, heap, netops, pattern, profile, shmem,
-               team, topology, trace, tuner)
+from . import (abmodel, collectives, elastic, fault, heap, netops, pattern,
+               profile, shmem, team, topology, trace, tuner)
+from .elastic import DegradedMesh, degrade, recover
+from .fault import (DeadlineExceeded, FaultInjector, FaultPlan, LinkFailure,
+                    PEFailure)
 from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, Schedule, Stage, as_pattern, compile_pattern
 from .profile import OpSample, Profiler
-from .shmem import Ctx, ShmemContext, sim_ctx, spmd_ctx
+from .shmem import Ctx, RetryPolicy, ShmemContext, sim_ctx, spmd_ctx
 from .team import (Team, TeamPartition, from_active_set, make_team, split_2d,
                    split_strided, team_world)
 from .topology import MeshTopology, epiphany3, v5e_multipod, v5e_pod
@@ -12,8 +15,11 @@ from .trace import Tracer
 from .tuner import TunedSelector, Tuner, TuningDB
 
 __all__ = [
-    "abmodel", "collectives", "heap", "netops", "pattern", "profile",
-    "shmem", "team", "topology", "trace", "tuner",
+    "abmodel", "collectives", "elastic", "fault", "heap", "netops",
+    "pattern", "profile", "shmem", "team", "topology", "trace", "tuner",
+    "DegradedMesh", "degrade", "recover", "DeadlineExceeded",
+    "FaultInjector", "FaultPlan", "LinkFailure", "PEFailure",
+    "RetryPolicy",
     "NetOps", "NocSimNetOps", "SimNetOps", "SpmdNetOps", "CommPattern",
     "Schedule", "Stage", "as_pattern", "compile_pattern", "Ctx",
     "ShmemContext", "sim_ctx", "spmd_ctx", "Team", "TeamPartition",

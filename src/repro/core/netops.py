@@ -44,9 +44,21 @@ class NetOps:
     # attribute, NOT a dataclass field — the default costs subclasses
     # nothing and the hot path pays one `is None` test when unattached.
     profile = None
+    # Optional attached repro.core.fault.FaultInjector (ShmemContext's
+    # fault= knob sets it): every ppermute consults the fault plan and
+    # raises typed PEFailure/LinkFailure instead of silently moving data
+    # a dead mesh could not (DESIGN.md §17).  Patterns are static host
+    # objects, so the check is pure host code and works identically
+    # under eager SIM and SPMD tracing.
+    fault = None
 
     def my_pe(self):
         raise NotImplementedError
+
+    def _check_fault(self, p: CommPattern) -> None:
+        f = self.fault
+        if f is not None:
+            f.check(p, self)
 
     def _count_ppermute(self, p: CommPattern, x) -> None:
         """Aggregate-counter hook (near-zero when no profiler attached)."""
@@ -94,6 +106,8 @@ class SpmdNetOps(NetOps):
 
     def ppermute(self, x, perm):
         p = as_pattern(perm, self.n_pes)
+        if self.fault is not None:
+            self._check_fault(p)
         if self.profile is not None:
             self._count_ppermute(p, x)
         rounds = p.unique_src_rounds()
@@ -134,6 +148,8 @@ class SimNetOps(NetOps):
         # device-resident index arrays are cached per interned pattern —
         # the hot path no longer re-uploads host indices every call
         p = as_pattern(perm, self.n_pes)
+        if self.fault is not None:
+            self._check_fault(p)
         if self.profile is not None:
             self._count_ppermute(p, x)
         has, gather_idx = p.gather_arrays_device()
@@ -197,6 +213,8 @@ class NocSimNetOps(SimNetOps):
         p = as_pattern(perm, self.n_pes)
         if not p.pairs:                  # empty pattern: zeros, like base
             return super().ppermute(x, p)
+        if self.fault is not None:
+            self._check_fault(p)
         if self.profile is not None:
             self._count_ppermute(p, x)
         n_waves, has, idx = self._wave_arrays(p)

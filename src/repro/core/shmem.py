@@ -34,14 +34,34 @@ import numpy as np
 from jax import lax
 
 from . import collectives as coll
+from . import fault as fault_mod
 from . import team as team_mod
 from . import tuner as tuner_mod
+from .fault import DeadlineExceeded, LinkFailure
 from .netops import NetOps, NocSimNetOps, SimNetOps, SpmdNetOps
 from .pattern import CommPattern, PatternLike, as_pattern
 from .profile import Profiler, trace_clean
 from .topology import MeshTopology
 
 _NULL_CM = contextlib.nullcontext()
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff policy for failed non-blocking RMA (DESIGN.md §17).
+
+    A :class:`~repro.core.fault.LinkFailure` at issue time is retried up
+    to `max_retries` times with exponential backoff (the injector's
+    alternate-route and transient-heal logic decides whether a retry can
+    succeed); a :class:`~repro.core.fault.PEFailure` is NEVER retried —
+    a dead PE needs the elastic path (core/elastic.py), not patience.
+    `deadline_s` is the default quiet()/fence() deadline when the caller
+    passes none."""
+
+    max_retries: int = 3
+    backoff_s: float = 1e-3
+    backoff_mult: float = 2.0
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass(eq=False)    # a handle: identity, not value, equality
@@ -59,13 +79,17 @@ class Future:
               owner->requester push of the IPI-get);
     op      : "put" | "get";
     nbytes  : per-PE payload bytes the op moves (cost accounting);
-    seq     : issue order within the owning context (monotonic)."""
+    seq     : issue order within the owning context (monotonic);
+    delay_s : injected straggler delay (fault layer, DESIGN.md §17) —
+              the extra completion time a slow PE adds, charged at
+              quiet() where a real slow DMA would be felt."""
 
     value: Any
     pattern: CommPattern | None = None
     op: str = "put"
     nbytes: float = 0.0
     seq: int = -1
+    delay_s: float = 0.0
     _done: bool = False
 
     @property
@@ -127,8 +151,13 @@ class Ctx:
                            for l in jax.tree.leaves(payload)))
         if isinstance(self.shmem.net, SimNetOps):
             nbytes /= self.n_pes            # leading PE axis is not payload
+        # Straggler delay charged by the fault injector at issue time
+        # rides on the Future and is FELT at quiet() — a slow PE's DMA
+        # takes longer to land, not longer to enqueue (DESIGN.md §17).
+        inj = self.shmem.net.fault
+        delay = inj.consume_delay() if inj is not None else 0.0
         f = Future(value, pattern=pattern, op=op, nbytes=nbytes,
-                   seq=self._op_seq)
+                   seq=self._op_seq, delay_s=delay)
         self._op_seq += 1
         self._pending.append(f)
         prof = self.shmem.profile
@@ -144,15 +173,51 @@ class Ctx:
     def pending_ops(self) -> tuple[Future, ...]:
         return tuple(self._pending)
 
+    def _issue(self, fn, p: CommPattern, op: str):
+        """Issue an RMA with retry/backoff (DESIGN.md §17): a
+        :class:`LinkFailure` (route + alternate both severed) is retried
+        up to ``RetryPolicy.max_retries`` times with exponential backoff
+        — the injector's transient-heal budget decides whether a retry
+        can succeed.  A ``PEFailure`` propagates immediately: dead PEs
+        need the elastic path, not patience.  The failing op name rides
+        on the raised error."""
+        pol = self.shmem.retry
+        backoff = pol.backoff_s
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except LinkFailure as e:
+                attempt += 1
+                e.op = op
+                if attempt > pol.max_retries:
+                    raise
+                fault_mod.fault_event(
+                    self.shmem._active_profile(), "fault.retries",
+                    op=op, attempt=attempt, backoff_us=int(backoff * 1e6))
+                prof = self.shmem._active_profile()
+                if prof is not None:
+                    prof.count("fault.backoff_us", int(backoff * 1e6))
+                time.sleep(backoff)
+                backoff *= pol.backoff_mult
+
     def put_nbi(self, x, pattern, local=None) -> Future:
         p = self.compile(pattern)
-        return self._enqueue(self.shmem.put(x, p, local=local), p, "put", x)
+        return self._enqueue(
+            self._issue(lambda: self.shmem.put(x, p, local=local), p, "put"),
+            p, "put", x)
 
     def get_nbi(self, x, pattern, local=None) -> Future:
         p = self._owner_push(pattern)
-        return self._enqueue(self.shmem.put(x, p, local=local), p, "get", x)
+        return self._enqueue(
+            self._issue(lambda: self.shmem.put(x, p, local=local), p, "get"),
+            p, "get", x)
 
-    def quiet(self, *futures: Future):
+    def _deadline(self, deadline_s):
+        return deadline_s if deadline_s is not None \
+            else self.shmem.retry.deadline_s
+
+    def quiet(self, *futures: Future, deadline_s: float | None = None):
         """shmem_ctx_quiet: drain THIS context's pending queue — pin
         COMPLETION of its outstanding non-blocking ops, in issue order,
         before anything that consumes the returned values.  Other
@@ -163,10 +228,39 @@ class Ctx:
         fenced results.  With explicit `futures`, only those ops are
         completed (per-handle quiet); otherwise the whole queue drains and
         empties.  Drained futures are marked done and their .value is
-        replaced by the fenced value."""
+        replaced by the fenced value.
+
+        `deadline_s` (default: ``RetryPolicy.deadline_s``) bounds the
+        completion wait (DESIGN.md §17): when the injected straggler
+        delay riding on a pending Future exceeds it, quiet raises
+        :class:`~repro.core.fault.DeadlineExceeded` with the slowest
+        op's pattern attached and the queue UNTOUCHED — the op never
+        completed, so recovery code sees a consistent pending state.
+        Within the deadline the delay is actually slept, so measured
+        wall time degrades the way a real slow DMA would."""
         fs = list(futures) or self._pending
         if not fs:
             return ()
+        deadline = self._deadline(deadline_s)
+        delay = max((f.delay_s for f in fs), default=0.0)
+        if delay > 0.0:
+            fprof = self.shmem._active_profile()
+            if deadline is not None and delay > deadline:
+                slow = max(fs, key=lambda f: f.delay_s)
+                fault_mod.fault_event(
+                    fprof, "fault.deadline_exceeded", op=slow.op,
+                    delay_us=int(delay * 1e6),
+                    deadline_us=int(deadline * 1e6))
+                raise DeadlineExceeded(
+                    f"quiet() deadline {deadline:g}s exceeded: slowest "
+                    f"pending {slow.op} carries an injected straggler "
+                    f"delay of {delay:g}s",
+                    pattern=slow.pattern, op=slow.op)
+            if fprof is not None:
+                fprof.count("fault.straggler_wait_us", int(delay * 1e6))
+            time.sleep(delay)
+            for f in fs:
+                f.delay_s = 0.0
         prof = self.shmem.profile
         # Stall-vs-issue split (DESIGN.md §16): only meaningful outside a
         # trace (eager SIM), where block_until_ready IS the semantic
@@ -197,9 +291,16 @@ class Ctx:
                              t_start=t0 - prof._epoch)
         return fenced
 
-    def fence(self):
+    def fence(self, *, deadline_s: float | None = None):
         """shmem_ctx_fence: per-destination ordering WITHOUT completion
         (OpenSHMEM §9.10), scoped to THIS context's queue.
+
+        `deadline_s` (default: ``RetryPolicy.deadline_s``): fence never
+        waits, but a pending op already KNOWN to carry a straggler delay
+        beyond the deadline can be detected here without sleeping —
+        raises :class:`~repro.core.fault.DeadlineExceeded` so the caller
+        learns about the doomed op at the ordering point instead of the
+        completion point (DESIGN.md §17).
 
         Each pending op's value is data-chained after every earlier
         pending op that writes an overlapping destination PE, so XLA
@@ -210,6 +311,21 @@ class Ctx:
         values; () when the queue is empty."""
         if not self._pending:
             return ()
+        deadline = self._deadline(deadline_s)
+        if deadline is not None:
+            delay = max(f.delay_s for f in self._pending)
+            if delay > deadline:
+                slow = max(self._pending, key=lambda f: f.delay_s)
+                fault_mod.fault_event(
+                    self.shmem._active_profile(),
+                    "fault.deadline_exceeded", op=slow.op,
+                    delay_us=int(delay * 1e6),
+                    deadline_us=int(deadline * 1e6))
+                raise DeadlineExceeded(
+                    f"fence() deadline {deadline:g}s already unmeetable: "
+                    f"pending {slow.op} carries an injected straggler "
+                    f"delay of {delay:g}s",
+                    pattern=slow.pattern, op=slow.op)
         prof = self.shmem.profile
         timed = prof is not None and prof.enabled and trace_clean()
         t0 = time.perf_counter() if timed else 0.0
@@ -242,7 +358,8 @@ class ShmemContext:
 
     def __init__(self, net: NetOps, topo: MeshTopology | None = None,
                  use_wand_barrier: bool = False, link=None, embedding=None,
-                 profile=None, tuner=None):
+                 profile=None, tuner=None, fault=None, retry=None,
+                 fingerprint=None):
         self.net = net
         self.topo = topo
         self.use_wand_barrier = use_wand_barrier
@@ -266,7 +383,22 @@ class ShmemContext:
         # choose_embedding consult it before the analytic model.
         self.tuner = tuner
         self._sel = tuner.selector() if hasattr(tuner, "selector") else tuner
-        self._fp = tuner_mod.fingerprint(topo, net.n_pes)
+        # `fingerprint` overrides the machine identity collectives tune
+        # under — the elastic path passes the degraded-mesh fingerprint
+        # so the TunedSelector re-tunes instead of replaying full-mesh
+        # winners on a mesh that no longer exists (DESIGN.md §17).
+        self._fp = fingerprint if fingerprint is not None \
+            else tuner_mod.fingerprint(topo, net.n_pes)
+        if fingerprint is not None:
+            self.refingerprint(fingerprint)
+        # retry/backoff policy for nbi RMA + default quiet/fence deadline
+        # (DESIGN.md §17); fault= attaches a FaultPlan/FaultInjector to
+        # the backend so every ppermute consults it.
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.fault_injector = fault_mod.as_injector(
+            fault, topo=topo, profile=profile)
+        if self.fault_injector is not None:
+            net.fault = self.fault_injector
         if profile is not None:
             net.profile = profile
             if hasattr(tuner, "observe"):
@@ -295,6 +427,18 @@ class ShmemContext:
     def _active_profile(self):
         p = self.profile
         return p if (p is not None and p.enabled) else None
+
+    # -- elastic re-tuning (DESIGN.md §17) -----------------------------------
+    def refingerprint(self, fp: str) -> None:
+        """Re-key this context's tuning identity — called by the elastic
+        restart path after the mesh degrades.  Profiler op samples and
+        the TunedSelector's DB lookups both switch to `fp`, so tuned
+        decisions measured on the full mesh stop applying and fresh
+        measurements accumulate under the degraded-mesh key."""
+        self._fp = str(fp)
+        sel = self._sel
+        if sel is not None and hasattr(sel, "with_fingerprint"):
+            self._sel = sel.with_fingerprint(self._fp)
 
     def _group_desc(self, group) -> str:
         if group is None:
@@ -406,16 +550,16 @@ class ShmemContext:
     def get_nbi(self, x, pattern, local=None) -> Future:
         return self.ctx_default.get_nbi(x, pattern, local=local)
 
-    def quiet(self, *futures: Future):
+    def quiet(self, *futures: Future, deadline_s: float | None = None):
         """shmem_quiet: drain the DEFAULT context's pending queue (see
         Ctx.quiet; ops issued on created contexts need their own
         ctx.quiet — per-context isolation, DESIGN.md §11)."""
-        return self.ctx_default.quiet(*futures)
+        return self.ctx_default.quiet(*futures, deadline_s=deadline_s)
 
-    def fence(self):
+    def fence(self, *, deadline_s: float | None = None):
         """shmem_fence: per-destination ordering of the DEFAULT context's
         queue without completing it (see Ctx.fence)."""
-        return self.ctx_default.fence()
+        return self.ctx_default.fence(deadline_s=deadline_s)
 
     # -- teams (OpenSHMEM 1.4+; DESIGN.md §11) -------------------------------
     def team_world(self) -> team_mod.Team:

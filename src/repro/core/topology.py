@@ -115,6 +115,15 @@ class MeshTopology:
         over the route equals ``hops(a, b)``.  Cached per (topo, a, b)."""
         return _route(self, int(a) % self.n_pes, int(b) % self.n_pes)
 
+    def route_alt(self, a: int, b: int) -> tuple[tuple[int, int], ...]:
+        """The ALTERNATE dimension-ordered route: the FIRST dimension is
+        corrected first ('Y then X' on a 2D mesh) — the other member of
+        the minimal XY/YX route pair.  Same hop count as :meth:`route`
+        but (off the source row/column) link-disjoint from it, which is
+        what the fault layer retries over when a link on the primary
+        route is down (DESIGN.md §17).  Cached per (topo, a, b)."""
+        return _route_alt(self, int(a) % self.n_pes, int(b) % self.n_pes)
+
     def link_weight(self, u: int, v: int) -> float:
         """Per-hop cost of the (u, v) mesh link — the ``link_cost`` of the
         one dimension in which neighbors u and v differ."""
@@ -145,10 +154,21 @@ class MeshTopology:
 
 @functools.lru_cache(maxsize=1 << 16)
 def _route(topo: MeshTopology, a: int, b: int) -> tuple[tuple[int, int], ...]:
+    return _dim_ordered(topo, a, b, reversed(range(len(topo.shape))))
+
+
+@functools.lru_cache(maxsize=1 << 16)
+def _route_alt(topo: MeshTopology, a: int, b: int
+               ) -> tuple[tuple[int, int], ...]:
+    return _dim_ordered(topo, a, b, range(len(topo.shape)))
+
+
+def _dim_ordered(topo: MeshTopology, a: int, b: int, dims
+                 ) -> tuple[tuple[int, int], ...]:
     ca = list(topo.coords(a))
     cb = topo.coords(b)
     links: list[tuple[int, int]] = []
-    for dim in reversed(range(len(topo.shape))):       # last dim first
+    for dim in dims:
         extent = topo.shape[dim]
         delta = cb[dim] - ca[dim]
         if topo._torus()[dim]:

@@ -47,16 +47,24 @@ def nbytes_bucket(nbytes: float) -> int:
     return 1 << int(round(math.log2(float(nbytes))))
 
 
-def fingerprint(topo, n_pes: int) -> str:
+def fingerprint(topo, n_pes: int, dead_pes=()) -> str:
     """Topology identity the DB keys on.  Deliberately EXCLUDES the
     backend class: a DB calibrated on the SIM oracle for a given mesh is
     the prior the SPMD run on the same mesh inherits (the warm-then-
-    train flow); the DB file itself is per-machine."""
+    train flow); the DB file itself is per-machine.
+
+    `dead_pes` marks a DEGRADED mesh (DESIGN.md §17): a 4x4 mesh with
+    PE 5 dead is a different machine than the full mesh — its snake
+    embedding detours, its link loads shift — so measurements under the
+    two keys never blend, and the elastic restart path re-tunes under
+    the degraded key instead of replaying full-mesh winners."""
+    dead = ",".join(str(int(p)) for p in sorted(set(dead_pes)))
+    suffix = f":dead{dead}" if dead else ""
     if topo is None or getattr(topo, "n_pes", None) != n_pes:
-        return f"flat:n{n_pes}"
+        return f"flat:n{n_pes}{suffix}"
     t = "".join("1" if w else "0" for w in topo._torus())
     c = ",".join(f"{x:g}" for x in topo._cost())
-    return f"mesh{'x'.join(map(str, topo.shape))}:t{t}:c{c}"
+    return f"mesh{'x'.join(map(str, topo.shape))}:t{t}:c{c}{suffix}"
 
 
 def variant_key(algorithm: str, chunks: int, embedding=None) -> str:
@@ -202,26 +210,40 @@ class TunedSelector:
     pricing anything with the analytic model (DESIGN.md §13 precedence:
     measured best -> refitted model -> prior constants)."""
 
-    def __init__(self, db: TuningDB, team: str | None = None):
+    def __init__(self, db: TuningDB, team: str | None = None,
+                 fingerprint: str | None = None):
         self.db = db
         self._team = team
+        # Explicit fingerprint override (DESIGN.md §17): the elastic path
+        # pins the degraded-mesh key so lookups stop resolving against
+        # full-mesh measurements.  None = derive from (topo, n) per call.
+        self._fp = fingerprint
+
+    def with_fingerprint(self, fp: str) -> "TunedSelector":
+        """A copy of this selector keyed to `fp` — what
+        ``ShmemContext.refingerprint`` swaps in after mesh degradation."""
+        return TunedSelector(self.db, team=self._team, fingerprint=fp)
 
     def _t(self, n: int, team: str | None = None) -> str:
         return team or self._team or f"n{n}"
 
+    def _fp_of(self, topo, n: int) -> str:
+        return self._fp if self._fp is not None else fingerprint(topo, n)
+
     def algorithm(self, collective: str, n: int, nbytes: float, topo=None,
                   candidates: Sequence[str] | None = None,
                   team: str | None = None) -> str | None:
-        got = self.db.best(fingerprint(topo, n), collective, self._t(n, team),
-                           nbytes, algos=candidates)
+        got = self.db.best(self._fp_of(topo, n), collective,
+                           self._t(n, team), nbytes, algos=candidates)
         return None if got is None else got[0]
 
     def schedule(self, collective: str, n: int, nbytes: float, topo=None,
                  algos: Sequence[str] | None = None,
                  max_chunks: int | None = None,
                  team: str | None = None) -> tuple[str, int] | None:
-        got = self.db.best(fingerprint(topo, n), collective, self._t(n, team),
-                           nbytes, algos=algos, max_chunks=max_chunks)
+        got = self.db.best(self._fp_of(topo, n), collective,
+                           self._t(n, team), nbytes, algos=algos,
+                           max_chunks=max_chunks)
         return None if got is None else (got[0], got[1])
 
     def chunks(self, collective: str, algorithm: str, n: int, nbytes: float,
@@ -230,8 +252,9 @@ class TunedSelector:
         """Measured-best chunk count FOR the already-chosen algorithm —
         a best variant under a different algorithm says nothing about
         this one's pipelining, so it is a miss."""
-        got = self.db.best(fingerprint(topo, n), collective, self._t(n, team),
-                           nbytes, algos=[algorithm], max_chunks=max_chunks)
+        got = self.db.best(self._fp_of(topo, n), collective,
+                           self._t(n, team), nbytes, algos=[algorithm],
+                           max_chunks=max_chunks)
         return None if got is None else got[1]
 
     def embedding(self, n: int, nbytes: float, topo=None,
@@ -242,8 +265,8 @@ class TunedSelector:
         Searches +-2 neighboring size buckets: embedding selection keys
         on a representative payload (``EMBED_REF_BYTES``) that a sweep
         grid need not contain exactly."""
-        got = self.db.best(fingerprint(topo, n), collective, self._t(n, team),
-                           nbytes, widen=2)
+        got = self.db.best(self._fp_of(topo, n), collective,
+                           self._t(n, team), nbytes, widen=2)
         if got is None:
             return None
         algo, _, emb, _ = got

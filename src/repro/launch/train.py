@@ -30,6 +30,15 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", default="none", choices=["none", "auto"])
+    ap.add_argument("--step-deadline", type=float, default=600.0,
+                    help="per-step straggler deadline (seconds): a step "
+                         "exceeding it is recorded as a straggler event "
+                         "— the detection edge of the elastic restart "
+                         "protocol (DESIGN §17)")
+    ap.add_argument("--ckpt-async", default="on", choices=["on", "off"],
+                    help="off: periodic saves block the train loop "
+                         "(sync); on: saves snapshot to host and "
+                         "serialize on a background thread (DESIGN §17)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--allreduce-algo", default="paper",
                     choices=["paper", "auto"],
@@ -199,8 +208,10 @@ def main(argv=None):
         start = 0
         ft = None
         if args.ckpt_dir:
-            ft = ckpt.FaultToleranceManager(args.ckpt_dir,
-                                            save_every=args.ckpt_every)
+            ft = ckpt.FaultToleranceManager(
+                args.ckpt_dir, save_every=args.ckpt_every,
+                step_deadline_s=args.step_deadline,
+                async_save=args.ckpt_async == "on")
             if args.resume == "auto" and ft.resume_step() is not None:
                 start, restored = ckpt.restore(
                     args.ckpt_dir,
@@ -231,6 +242,15 @@ def main(argv=None):
         if ft:
             ft.finalize(args.steps, lambda: {"params": params,
                                              "opt": opt_state})
+            if ft.stragglers:
+                print(f"[train] {len(ft.stragglers)} step(s) exceeded "
+                      f"--step-deadline {args.step_deadline:g}s "
+                      f"(worst {max(s['stall_s'] for s in ft.stragglers):.1f}s)")
+            if metrics is not None:
+                metrics.counter(
+                    "train.stragglers",
+                    "steps exceeding the --step-deadline").inc(
+                    len(ft.stragglers))
         if tuner is not None and args.tuning_db:
             tuner.save(args.tuning_db)
             print(f"[train] tuning DB ({len(tuner.db)} points) saved to "

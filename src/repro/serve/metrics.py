@@ -212,6 +212,11 @@ class ServeMetrics:
         self.backpressure_waits = r.counter(
             "serve.backpressure_waits",
             "engine steps where the queue head could not get pages")
+        self.pe_failures = r.counter(
+            "serve.pe_failures", "PE failures detected during step()")
+        self.requests_requeued = r.counter(
+            "serve.requests_requeued",
+            "live requests re-queued after a PE failure")
         self.engine_steps = r.counter(
             "serve.engine_steps", "evict/admit/decode iterations")
         # gauges
@@ -237,6 +242,8 @@ class ServeMetrics:
             "serve.admission_wait_s", "submit -> admit queue wait")
         self.e2e_s = r.histogram(
             "serve.e2e_s", "submit -> eviction end-to-end latency")
+        self.recovery_s = r.histogram(
+            "serve.recovery_s", "PE-failure drain + re-queue wall time")
 
     # -- lifecycle hooks (ServeEngine calls these) ---------------------------
     def on_submit(self, rid: int) -> None:
@@ -273,6 +280,15 @@ class ServeMetrics:
     def on_backpressure(self) -> None:
         self.backpressure_waits.inc()
 
+    def on_pe_failure(self, n_requeued: int,
+                      recovery_s: float | None = None) -> None:
+        """A PE failure drained the engine: `n_requeued` live requests
+        went back to the queue head (DESIGN.md §17)."""
+        self.pe_failures.inc()
+        self.requests_requeued.inc(n_requeued)
+        if recovery_s is not None:
+            self.recovery_s.observe(recovery_s)
+
     def sample_engine(self, engine) -> None:
         """Per-step gauge sweep: scheduler queue + PagePool state."""
         self.engine_steps.inc()
@@ -297,7 +313,7 @@ class ServeMetrics:
         if p is not None:
             wire = {k: dict(v) for k, v in p.counters().items()
                     if k.startswith(("rma.", "ppermute", "collective.",
-                                     "sync."))}
+                                     "sync.", "fault."))}
             doc["wire"] = wire
             heatmap = getattr(p, "heatmap", None)
             if callable(heatmap):

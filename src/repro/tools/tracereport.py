@@ -145,6 +145,29 @@ def _stall_report(evs: list[dict]) -> list[str]:
     return lines
 
 
+def _chaos_report(evs: list[dict], rep: dict) -> list[str]:
+    """Fault-layer roll-up: the ``fault.*`` counters plus grouped
+    ``instant()`` fault events, so a chaos run's injected failures,
+    retries, reroutes and recoveries read off one section."""
+    lines = []
+    counters = rep.get("counters", {}) if isinstance(rep, dict) else {}
+    fc = {k: v for k, v in sorted(counters.items())
+          if k.startswith("fault.")}
+    for k, v in fc.items():
+        n = v.get("count", v) if isinstance(v, dict) else v
+        lines.append(f"  {k:<28s} {n:>10}")
+    insts: dict[str, int] = {}
+    for ev in evs:
+        if ev.get("ph") in ("i", "I") and \
+                str(ev.get("name", "")).startswith("fault."):
+            insts[ev["name"]] = insts.get(ev["name"], 0) + 1
+    if insts:
+        lines.append("  instant events:")
+        for name, cnt in sorted(insts.items()):
+            lines.append(f"    {name:<26s} x{cnt}")
+    return lines
+
+
 def _ascii_heatmap(hm: dict, width: int = 2) -> list[str]:
     """Per-PE heat (sum of incident link bytes) as a character grid."""
     shape = hm.get("shape", [])
@@ -188,6 +211,11 @@ def report(trace_path: pathlib.Path, metrics_path: pathlib.Path | None,
     if stalls:
         print("\nquiet/fence stall attribution:")
         print("\n".join(stalls))
+
+    chaos = _chaos_report(evs, rep)
+    if chaos:
+        print("\nchaos summary (fault layer, DESIGN.md §17):")
+        print("\n".join(chaos))
 
     for hm in rep.get("heatmap", []):
         shape = "x".join(map(str, hm["shape"]))

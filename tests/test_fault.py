@@ -1,0 +1,595 @@
+"""Fault-injection, retry/backoff, async PGAS checkpointing and elastic
+recovery (DESIGN.md §17).
+
+Layers, cheapest first: the declarative FaultPlan as pure data; the
+injector against live SIM / NoC-SIM traffic (dead PE, dropped link with
+YX reroute, transient drops healing under retry/backoff, stragglers
+surfacing at quiet/fence deadlines); the checkpoint layer's crash
+atomicity and typed errors; the PGAS checkpoint stream + kill-and-resume
+on SIM (loss trajectory allclose to an uninterrupted run resumed from
+the same step); the serving engine's graceful drain; and the tp=2 SPMD
+kill-and-resume in a subprocess."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core import RetryPolicy, sim_ctx
+from repro.core.fault import (DeadlineExceeded, FaultInjector, FaultPlan,
+                              LinkFailure, PEFailure)
+from repro.core.topology import epiphany3
+
+
+TOPO = epiphany3()          # 4x4, 16 PEs
+N = TOPO.n_pes
+FAST_RETRY = RetryPolicy(max_retries=3, backoff_s=1e-5, backoff_mult=2.0)
+
+
+def payload(n=N, w=4, seed=0):
+    return jnp.asarray(np.random.RandomState(seed)
+                       .randn(n, w).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: pure data
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_state_is_cumulative_and_heals():
+    plan = (FaultPlan()
+            .slow_pe(1, pe=7, delay_s=0.05)
+            .drop_link(2, 4, 5, heal_after=2)
+            .kill_pe(3, pe=9)
+            .heal_straggler(4, pe=7)
+            .heal_link(5, 4, 5)
+            .heal_pe(6, pe=9))
+    dead, dropped, slow = plan.state_at(0)
+    assert (dead, dropped, slow) == (frozenset(), {}, {})
+    dead, dropped, slow = plan.state_at(3)
+    assert dead == frozenset({9})
+    assert dropped == {(4, 5): 2}
+    assert slow == {7: 0.05}
+    dead, dropped, slow = plan.state_at(99)   # everything healed
+    assert (dead, dropped, slow) == (frozenset(), {}, {})
+
+
+def test_fault_plan_link_key_is_canonical():
+    plan = FaultPlan().drop_link(0, 5, 4)
+    assert plan.state_at(0)[1] == {(4, 5): None}
+
+
+# ---------------------------------------------------------------------------
+# injector against live traffic (SIM and NoC-SIM)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(params=[False, True], ids=["sim", "noc-sim"])
+def noc(request):
+    return request.param
+
+
+def test_dead_pe_raises_typed_pe_failure(noc):
+    plan = FaultPlan().kill_pe(3, pe=5)
+    ctx = sim_ctx(N, TOPO, noc=noc, fault=plan, retry=FAST_RETRY)
+    inj = ctx.fault_injector
+    x = payload()
+    # before the kill step the mesh is healthy
+    ctx.quiet(ctx.put_nbi(x, [(5, 6)]))
+    inj.set_step(3)
+    assert inj.dead_pes == (5,)
+    with pytest.raises(PEFailure) as ei:
+        ctx.put_nbi(x, [(5, 6)])
+    assert ei.value.pe == 5 and ei.value.step == 3
+    assert ei.value.pattern is not None
+    # a collective schedule touching the dead PE dies the same way
+    with pytest.raises(PEFailure):
+        ctx.to_all(x, "sum")
+    # traffic among live PEs still flows
+    ctx.quiet(ctx.put_nbi(x, [(0, 1)]))
+
+
+def test_dropped_link_takes_alternate_yx_route(noc):
+    # XY route 0->6 is 0-1-2-6; dropping link (1,2) leaves the YX
+    # alternate 0-4-5-6 intact -> traffic reroutes, no error
+    plan = FaultPlan().drop_link(0, 1, 2)
+    ctx = sim_ctx(N, TOPO, noc=noc, fault=plan, retry=FAST_RETRY)
+    out = ctx.quiet(ctx.put_nbi(payload(), [(0, 6)]))
+    assert len(out) == 1
+    assert ctx.fault_injector.stats.get("fault.reroutes") == 1
+    assert "fault.link_hits" not in ctx.fault_injector.stats
+
+
+def test_both_routes_severed_raises_link_failure(noc):
+    # sever the XY route (link 1-2) AND the YX alternate (link 4-5)
+    plan = FaultPlan().drop_link(0, 1, 2).drop_link(0, 4, 5)
+    ctx = sim_ctx(N, TOPO, noc=noc,
+                  retry=RetryPolicy(max_retries=2, backoff_s=1e-5),
+                  fault=plan)
+    with pytest.raises(LinkFailure) as ei:
+        ctx.put_nbi(payload(), [(0, 6)])
+    e = ei.value
+    assert e.link in {(1, 2), (4, 5)}
+    assert e.op == "put"
+    # every attempt (1 issue + 2 retries) hit the severed pair
+    assert e.attempts == 3
+    assert ctx.fault_injector.stats["fault.link_hits"] == 3
+
+
+def test_transient_link_heals_under_retry_backoff(noc):
+    # adjacent pair (0, 1): XY and YX routes are the same single link,
+    # so the drop is unroutable — but heal_after=2 makes it transient:
+    # attempt 1 fails, attempt 2 fails AND heals, attempt 3 succeeds.
+    plan = FaultPlan().drop_link(0, 0, 1, heal_after=2)
+    ctx = sim_ctx(N, TOPO, noc=noc, fault=plan, retry=FAST_RETRY)
+    out = ctx.quiet(ctx.put_nbi(payload(), [(0, 1)]))
+    assert len(out) == 1
+    stats = ctx.fault_injector.stats
+    assert stats["fault.link_hits"] == 2
+    # healed: later traffic over the link is clean
+    ctx.quiet(ctx.put_nbi(payload(), [(0, 1)]))
+    assert stats["fault.link_hits"] == 2
+
+
+def test_straggler_rides_future_and_deadline_fires(noc):
+    plan = FaultPlan().slow_pe(0, pe=3, delay_s=0.02)
+    ctx = sim_ctx(N, TOPO, noc=noc, fault=plan, retry=FAST_RETRY)
+    f = ctx.put_nbi(payload(), [(3, 2)])
+    assert f.delay_s == pytest.approx(0.02)
+    # fence sees the doomed op without sleeping
+    with pytest.raises(DeadlineExceeded):
+        ctx.fence(deadline_s=0.01)
+    # quiet under the deadline raises and leaves the queue UNTOUCHED
+    with pytest.raises(DeadlineExceeded) as ei:
+        ctx.quiet(deadline_s=0.01)
+    assert ei.value.op == "put"
+    assert ctx.pending_count == 1
+    # a generous deadline completes (and actually waits the delay)
+    out = ctx.quiet(deadline_s=1.0)
+    assert len(out) == 1 and ctx.pending_count == 0
+
+
+def test_retry_policy_default_deadline_applies():
+    plan = FaultPlan().slow_pe(0, pe=3, delay_s=0.05)
+    ctx = sim_ctx(N, TOPO, fault=plan,
+                  retry=RetryPolicy(backoff_s=1e-5, deadline_s=0.01))
+    ctx.put_nbi(payload(), [(3, 2)])
+    with pytest.raises(DeadlineExceeded):
+        ctx.quiet()                      # no explicit deadline: policy's
+
+
+def test_fault_events_land_on_tracer_and_tracereport():
+    from repro.core.trace import LEVEL_FULL, Tracer
+    from repro.tools import tracereport
+    tracer = Tracer(level=LEVEL_FULL)
+    plan = (FaultPlan().slow_pe(0, pe=3, delay_s=1e-4)
+                       .drop_link(0, 1, 2))
+    ctx = sim_ctx(N, TOPO, fault=plan, retry=FAST_RETRY, profile=tracer)
+    ctx.quiet(ctx.put_nbi(payload(), [(0, 6)]))     # reroute
+    ctx.quiet(ctx.put_nbi(payload(), [(3, 2)]))     # straggler
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.json")
+        tracer.dump_chrome(path)
+        doc = json.loads(open(path).read())
+    assert tracereport.validate_trace(doc) == []
+    counters = doc["repro"]["counters"]
+    assert counters["fault.reroute"]["count"] == 1
+    assert counters["fault.straggler"]["count"] == 1
+    assert counters["fault.straggler_wait_us"]["count"] >= 1
+    evs = doc["traceEvents"]
+    names = {e["name"] for e in evs if e.get("ph") in ("i", "I")}
+    assert {"fault.reroute", "fault.straggler"} <= names
+    lines = tracereport._chaos_report(evs, doc["repro"])
+    assert any("fault.reroute" in l for l in lines)
+    assert any("instant events" in l for l in lines)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint layer: atomicity, typed errors, async-save race
+# ---------------------------------------------------------------------------
+
+def _state(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": r.randn(4, 3).astype(np.float32),
+            "opt": {"m": r.randn(4, 3).astype(np.float32)}}
+
+
+def test_async_save_snapshots_before_thread():
+    """Regression: a train step mutating state while the async save is
+    in flight must not corrupt the checkpoint — on_step snapshots to
+    host BEFORE the thread spawns."""
+    from repro.ckpt import manager as ckpt
+    state = _state()
+    want = {k: np.array(v) for k, v in
+            [("w", state["w"]), ("m", state["opt"]["m"])]}
+    with tempfile.TemporaryDirectory() as d:
+        ft = ckpt.FaultToleranceManager(d, save_every=1, async_save=True)
+        ft.on_step(1, lambda: state)
+        state["w"] *= -1.0               # mutate mid-save, in place
+        state["opt"]["m"][:] = 999.0
+        ft._join()
+        step, restored = ckpt.restore(d, _state())
+        assert step == 1
+        assert np.array_equal(np.asarray(restored["w"]), want["w"])
+        assert np.array_equal(np.asarray(restored["opt"]["m"]), want["m"])
+
+
+def test_restore_missing_leaf_raises_checkpoint_error():
+    from repro.ckpt import manager as ckpt
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, {"w": np.zeros(4, np.float32)})
+        bad = {"w": np.zeros(4, np.float32),
+               "extra": np.zeros(2, np.float32)}
+        with pytest.raises(ckpt.CheckpointError, match="extra"):
+            ckpt.restore(d, bad)
+
+
+def test_dangling_latest_falls_back_to_newest_complete():
+    import shutil
+    from repro.ckpt import manager as ckpt
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, {"w": np.full(4, 1.0, np.float32)})
+        ckpt.save(d, 2, {"w": np.full(4, 2.0, np.float32)})
+        shutil.rmtree(os.path.join(d, "step-00000002"))
+        # LATEST still names step 2 — resolution must fall back
+        assert ckpt.latest_step(d) == 1
+        step, restored = ckpt.restore(d, {"w": np.zeros(4, np.float32)})
+        assert step == 1
+        assert np.asarray(restored["w"])[0] == 1.0
+
+
+def test_no_complete_checkpoint_is_typed_not_keyerror():
+    from repro.ckpt import manager as ckpt
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.latest_step(d) is None
+        with pytest.raises(ckpt.CheckpointError):
+            ckpt.restore(d, {"w": np.zeros(2, np.float32)})
+
+
+def test_crash_mid_save_keeps_previous_and_next_save_recovers():
+    from repro.ckpt import manager as ckpt
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, _state())
+        # crash mid-save: a tmp dir with partial leaves, never renamed
+        tmp = os.path.join(d, "tmp-2")
+        os.mkdir(tmp)
+        np.save(os.path.join(tmp, "partial.npy"), np.zeros(2))
+        assert ckpt.latest_step(d) == 1
+        # a step dir whose manifest names a missing leaf file is
+        # incomplete — rejected by resolution, not restored from
+        import json as _json
+        broken = os.path.join(d, "step-00000005")
+        os.mkdir(broken)
+        with open(os.path.join(broken, "manifest.json"), "w") as fh:
+            _json.dump({"step": 5,
+                        "leaves": [{"name": "w", "file": "gone.npy",
+                                    "shape": [2], "dtype": "float32"}]},
+                       fh)
+        assert ckpt.latest_step(d) == 1
+        # the next save overwrites the stale tmp dir and becomes latest
+        ckpt.save(d, 2, _state(1))
+        assert ckpt.latest_step(d) == 2
+
+
+def test_reshard_shrink_grow_round_trips():
+    from repro.ckpt.manager import _reshard
+    a = np.arange(12, dtype=np.float32).reshape(2, 6)
+    grown = _reshard(a, (6, 6), "w")         # tile up
+    assert grown.shape == (6, 6)
+    back = _reshard(grown, (2, 6), "w")      # slice back down
+    assert np.array_equal(back, a)
+    # shrink keeps the leading slice
+    assert np.array_equal(_reshard(a, (2, 4), "w"), a[:, :4])
+    with pytest.raises(ValueError):
+        _reshard(a, (2, 6, 1), "w")          # rank change is an error
+
+
+# ---------------------------------------------------------------------------
+# PGAS checkpoint stream: overlap + isolation + round trip
+# ---------------------------------------------------------------------------
+
+def _pgas_state(seed=0):
+    r = np.random.RandomState(seed)
+    return {"w": jnp.asarray(r.randn(N, 8).astype(np.float32)),
+            "opt": {"m": jnp.asarray(r.randn(N, 3).astype(np.float32))},
+            "scale": jnp.float32(2.5)}
+
+
+@pytest.mark.parametrize("async_issue", [False, True],
+                         ids=["sync-issue", "async-issue"])
+def test_pgas_checkpoint_round_trips(async_issue):
+    from repro.ckpt import manager as ckpt
+    from repro.ckpt.pgas import PgasCheckpointer
+    ctx = sim_ctx(N, TOPO)
+    state = _pgas_state()
+    with tempfile.TemporaryDirectory() as d:
+        ck = PgasCheckpointer(ctx, d, async_issue=async_issue)
+        n_rot = ck.begin(4, state)
+        assert n_rot == 2 * (N - 1)          # two PE-sharded leaves
+        assert ck.in_flight
+        path = ck.drain()
+        assert path is not None and ck.pending == 0
+        step, restored = ckpt.restore(d, state)
+        assert step == 4
+        for got, want in zip(jax.tree.leaves(restored),
+                             jax.tree.leaves(state)):
+            assert np.allclose(np.asarray(got), np.asarray(want))
+
+
+def test_pgas_stream_is_isolated_from_default_context():
+    """Per-context isolation (DESIGN.md §11): the train step's own
+    quiet() must not complete — or stall behind — checkpoint traffic."""
+    from repro.ckpt.pgas import PgasCheckpointer
+    ctx = sim_ctx(N, TOPO)
+    with tempfile.TemporaryDirectory() as d:
+        ck = PgasCheckpointer(ctx, d, async_issue=False)
+        ck.begin(0, _pgas_state())
+        assert ck.pending == 2 * (N - 1)
+        # overlapped "train step" traffic on the DEFAULT context
+        ctx.quiet(ctx.put_nbi(payload(), [(0, 1)]))
+        assert ctx.pending_count == 0        # default ctx drained ...
+        assert ck.pending == 2 * (N - 1)     # ... ckpt stream untouched
+        ck.drain()
+        assert ck.pending == 0
+
+
+def test_pgas_begin_auto_drains_previous_epoch():
+    from repro.ckpt import manager as ckpt
+    from repro.ckpt.pgas import PgasCheckpointer
+    ctx = sim_ctx(N, TOPO)
+    with tempfile.TemporaryDirectory() as d:
+        ck = PgasCheckpointer(ctx, d)
+        ck.begin(1, _pgas_state(1))
+        ck.begin(2, _pgas_state(2))          # drains epoch 1 first
+        assert ckpt.latest_step(d) == 1
+        ck.drain()
+        assert ckpt.latest_step(d) == 2
+
+
+def test_pgas_stream_surfaces_pe_failure_at_drain():
+    from repro.ckpt.pgas import PgasCheckpointer
+    plan = FaultPlan().kill_pe(2, pe=5)
+    ctx = sim_ctx(N, TOPO, fault=plan, retry=FAST_RETRY)
+    ctx.fault_injector.set_step(2)
+    with tempfile.TemporaryDirectory() as d:
+        ck = PgasCheckpointer(ctx, d)
+        ck.begin(2, _pgas_state())
+        with pytest.raises(PEFailure):
+            ck.drain()
+        assert not ck.in_flight              # stream cleaned up
+
+
+# ---------------------------------------------------------------------------
+# elastic: degraded mesh + kill-and-resume on SIM
+# ---------------------------------------------------------------------------
+
+def test_degrade_builds_live_ring_team_and_fingerprint():
+    from repro.core.elastic import _ring_cost, degrade
+    dm = degrade(TOPO, [5])
+    assert dm.dead == (5,) and dm.n_live == N - 1
+    assert 5 not in dm.live and sorted(dm.live) == [
+        p for p in range(N) if p != 5]
+    assert dm.fingerprint.endswith(":dead5")
+    assert dm.team.size == N - 1
+    # the live ring stays congestion-free: no physical link is shared
+    max_load, _ = _ring_cost(TOPO, dm.live)
+    assert max_load == 1.0
+
+
+def test_degrade_flat_pe_space_needs_world_n():
+    from repro.core.elastic import degrade
+    dm = degrade(None, [1], world_n=4)
+    assert dm.live == (0, 2, 3)
+    assert dm.fingerprint == "flat:n4:dead1"
+    with pytest.raises(ValueError):
+        degrade(None, [1])
+
+
+def _toy_run(ctx, w, steps, start=0, lr=0.05, ck=None, ckpt_every=2,
+             drive_injector=False):
+    """Deterministic toy training loop on the PGAS substrate: allreduce
+    the 'gradient', SGD step, loss = mean square.  Checkpoints the
+    PRE-step state labeled with its step, so a resume from step k
+    replays exactly what the uninterrupted run did from step k."""
+    losses = []
+    inj = ctx.fault_injector
+    for step in range(start, steps):
+        if drive_injector and inj is not None:
+            inj.set_step(step)
+        if ck is not None and step % ckpt_every == 0:
+            ck.begin(step, {"w": w})
+        g = ctx.to_all(w, "sum") / ctx.n_pes
+        losses.append(float(jnp.mean(g * g)))
+        w = w - lr * g
+    return losses, w
+
+
+def test_kill_and_resume_sim_matches_uninterrupted_trajectory():
+    """The tentpole end-to-end on SIM: async PGAS checkpoints overlap
+    the loop; a PE failure at step 5 triggers detect -> drain the
+    in-flight stream -> degrade/refingerprint -> restore -> resume; the
+    resumed trajectory must equal the uninterrupted run's from the same
+    step."""
+    from repro.ckpt.pgas import PgasCheckpointer
+    from repro.core.elastic import recover
+    steps = 9
+    w0 = payload(w=8, seed=3)
+
+    # reference: uninterrupted
+    ref_losses, _ = _toy_run(sim_ctx(N, TOPO), w0, steps)
+
+    # victim: checkpoint every 2 steps, PE 5 dies at step 5
+    plan = FaultPlan().kill_pe(5, pe=5)
+    ctx = sim_ctx(N, TOPO, fault=plan, retry=FAST_RETRY)
+    with tempfile.TemporaryDirectory() as d:
+        # inline issue: deterministic interleaving with the fault clock
+        # (the worker-thread overlap path is covered above)
+        ck = PgasCheckpointer(ctx, d, async_issue=False)
+        with pytest.raises(PEFailure) as ei:
+            _toy_run(ctx, w0, steps, ck=ck, drive_injector=True)
+        assert ei.value.pe == 5
+
+        # recovery: complete the in-flight stream (issued while the PE
+        # was alive — step 4's checkpoint), then the elastic protocol
+        ck.drain()
+        dead = ctx.fault_injector.dead_pes
+        template = {"w": w0}
+        step, state, dm = recover(ctx, dead, d, template)
+        assert step == 4 and dm.dead == (5,)
+        assert ctx._fp == dm.fingerprint        # selector re-keyed
+
+        # resume on a healthy context (replacement hardware) from the
+        # restored step: trajectories must match the uninterrupted run
+        res_losses, _ = _toy_run(sim_ctx(N, TOPO), state["w"], steps,
+                                 start=step)
+        np.testing.assert_allclose(res_losses, ref_losses[step:],
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_recover_reports_to_profiler():
+    from repro.ckpt import manager as ckpt
+    from repro.core.elastic import recover
+    from repro.core.profile import Profiler
+    prof = Profiler(level=1)
+    ctx = sim_ctx(N, TOPO, profile=prof)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, {"w": np.ones((N, 2), np.float32)})
+        step, state, dm = recover(
+            ctx, [5, 9], d, {"w": np.zeros((N, 2), np.float32)})
+        assert step == 7 and dm.dead == (5, 9)
+        assert dm.fingerprint.endswith(":dead5,9")
+        assert "fault.recovery_us" in prof.counters()
+        assert "fault.recovered" in prof.counters()
+
+
+# ---------------------------------------------------------------------------
+# serving: graceful drain + re-queue on PE loss
+# ---------------------------------------------------------------------------
+
+def _make_engine(params=None, **kw):
+    from repro.configs import smoke_config
+    from repro.launch.mesh import make_mesh
+    from repro.serve.engine import ServeEngine
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_seq", 32)
+    kw.setdefault("prompt_bucket", 16)
+    return ServeEngine(smoke_config("qwen2-0.5b"), make_mesh(1, 1),
+                       params=params, capture_logits=True, **kw)
+
+
+def test_serve_pe_failure_drains_requeues_and_regenerates_bitwise():
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 1000, size=n).astype(np.int32)
+               for n in (5, 9, 3)]
+    eng = _make_engine()
+    rids = [eng.submit(p, 5) for p in prompts]
+    eng.step()                               # admit all three, 1 token in
+    assert sorted(eng.scheduler.active_slots()) == [0, 1, 2]
+
+    real = eng._djit
+    shots = {"n": 0}
+
+    def dying_djit(*a, **kw):
+        if shots["n"] == 0:
+            shots["n"] += 1
+            raise PEFailure("PE 1 dropped off the NoC", pe=1, step=1)
+        return real(*a, **kw)
+
+    eng._djit = dying_djit
+    res = eng.step()
+    assert res["faulted"] and res["pe"] == 1
+    # FIFO preserved: queue head is back in slot (admission) order
+    assert res["requeued"] == rids
+    assert [r.rid for r in eng.scheduler.queue] == rids
+    assert eng.scheduler.active_slots() == []
+    assert eng.kv.pool.live_pages() == 0     # pages freed, nothing leaks
+    if eng.metrics is not None:
+        assert eng.metrics.pe_failures.value == 1
+        assert eng.metrics.requests_requeued.value == len(rids)
+
+    # the engine re-runs everything; greedy decode is bit-identical
+    # batched or alone, so results match a fault-free engine exactly
+    eng.run()
+    ref = _make_engine(params=eng.params)
+    for rid, p in zip(rids, prompts):
+        q = ref.submit(p, 5)
+        ref.run()
+        assert np.array_equal(eng.results[rid], ref.results[q]), rid
+
+
+# ---------------------------------------------------------------------------
+# tp=2 SPMD kill-and-resume (subprocess)
+# ---------------------------------------------------------------------------
+
+FAULT_RESUME_SCRIPT = textwrap.dedent("""
+    import os, shutil, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    from repro.ckpt import manager as ckpt
+    from repro.data import pipeline as data_mod
+    from repro.launch import train as train_mod
+
+    d = tempfile.mkdtemp()
+    args = ["--arch", "qwen2-0.5b", "--smoke", "--data", "1",
+            "--model", "2", "--seq-len", "32", "--batch", "4",
+            "--ckpt-dir", d]
+
+    # phase 1: tp=2 run killed at step 4 — a 'PE failure' injected at
+    # the batch fetch — after the periodic async save at step 2 landed
+    real_batch = data_mod.SyntheticLM.batch
+    def dying_batch(self, step):
+        if step == 4:
+            raise RuntimeError("injected PE failure: node lost")
+        return real_batch(self, step)
+    data_mod.SyntheticLM.batch = dying_batch
+    try:
+        train_mod.main(args + ["--steps", "6", "--ckpt-every", "2"])
+        raise SystemExit("kill did not fire")
+    except RuntimeError as e:
+        assert "node lost" in str(e), e
+    data_mod.SyntheticLM.batch = real_batch
+    # the async save thread from step 2 may still be renaming — wait
+    import time
+    for _ in range(100):
+        if ckpt.latest_step(d) == 2:
+            break
+        time.sleep(0.1)
+    assert ckpt.latest_step(d) == 2, ckpt.latest_step(d)
+
+    # phase 2: kill-and-resume from the last complete checkpoint
+    d2 = d + "-resume"; shutil.copytree(d, d2)
+    l_resumed = train_mod.main(
+        args[:-1] + [d2, "--steps", "6", "--resume", "auto",
+                     "--ckpt-every", "100"])
+    assert len(l_resumed) == 4, l_resumed       # steps 2..5 replayed
+
+    # phase 3: the uninterrupted reference resumed from the same step
+    d3 = d + "-ref"; shutil.copytree(d, d3)
+    l_ref = train_mod.main(
+        args[:-1] + [d3, "--steps", "6", "--resume", "auto",
+                     "--ckpt-every", "100"])
+    assert np.isfinite(l_resumed).all()
+    assert np.allclose(l_resumed, l_ref, rtol=1e-5, atol=1e-6), \\
+        (l_resumed, l_ref)
+    print("FAULT-RESUME-OK")
+""")
+
+
+def test_spmd_tp2_kill_and_resume():
+    """A tp=2 SPMD training run killed mid-flight resumes from the last
+    complete checkpoint and reproduces the loss trajectory of an
+    uninterrupted run resumed from the same step (allclose)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", FAULT_RESUME_SCRIPT],
+                       env=env, capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "FAULT-RESUME-OK" in r.stdout

@@ -7,6 +7,14 @@ so the same grid point is re-measured run over run (benchmarks/run.py's
 standardized rows).  Rows below ``--min-us`` are skipped — alpha-scale
 rows are timer noise on shared runners.
 
+When the machine fingerprints stamped into the two documents differ, a
+loud warning precedes the table (wall times are only comparable within
+one fingerprint — PR 9 hit this variance and had to explain it by
+hand).  On failure the gate runs ``repro.tools.perfdiff`` and ships the
+attribution report (which cost-model term moved: pick/alpha/beta/
+contention) as ``bench-reports/perfdiff_report.{txt,json}`` — the
+explanation artifact, not just a ratio (DESIGN.md §18).
+
   PYTHONPATH=src python -m benchmarks.check_regression \\
       --baseline BENCH_6.json --current bench-reports/BENCH_smoke.json
 """
@@ -18,8 +26,11 @@ import math
 import pathlib
 import sys
 
+sys.path.insert(0, "src")
+
 # Pinned grid points: stable, size-suffixed rows present in the
-# bench-smoke subset (patterns + fused) AND in the full committed run.
+# bench-smoke subset (patterns + fused + roofline) AND in the full
+# committed run.
 PINS: list[tuple[str, str]] = [
     ("patterns", "allreduce_rd_65536B"),
     ("patterns", "allreduce_ring_65536B"),
@@ -36,6 +47,8 @@ PINS: list[tuple[str, str]] = [
     ("trace", "trace_allreduce_65536B_off"),
     ("fault", "ckpt_sync_save_16777216B"),
     ("fault", "recovery_restore_16pe_1MB"),
+    ("roofline", "roofline_train_wall_us"),
+    ("roofline", "roofline_decode_wall_us"),
 ]
 
 
@@ -45,10 +58,66 @@ def _rows(path: pathlib.Path) -> dict[tuple[str, str], float]:
             for r in doc.get("rows", [])}
 
 
+def _fingerprint_warning(baseline: pathlib.Path,
+                         current: pathlib.Path) -> None:
+    """Loud cross-machine banner when the stamped fingerprints differ
+    (or the baseline predates fingerprinting)."""
+    fb = json.loads(baseline.read_text()).get("machine")
+    fc = json.loads(current.read_text()).get("machine")
+    if fb == fc and fb is not None:
+        return
+    print("!" * 68)
+    if fb is None or fc is None:
+        missing = "baseline" if fb is None else "current"
+        print(f"!! WARNING: {missing} document carries no machine "
+              f"fingerprint")
+        print("!! (predates fingerprint stamping) — treat wall-time")
+        print("!! comparisons across documents with suspicion")
+    else:
+        print("!! WARNING: baseline and current runs come from "
+              "DIFFERENT machines")
+        for key in sorted(set(fb) | set(fc)):
+            b, c = fb.get(key), fc.get(key)
+            if b != c:
+                print(f"!!   {key}: baseline={b!r} current={c!r}")
+        print("!! wall-time ratios partly reflect hardware, not code —")
+        print("!! regenerate the baseline on THIS machine before "
+              "trusting the gate")
+    print("!" * 68)
+
+
+def _emit_attribution(baseline: pathlib.Path, current: pathlib.Path,
+                      threshold: float, min_us: float,
+                      report_dir: pathlib.Path) -> None:
+    """Run perfdiff on the failing pair and ship the explanation
+    artifact.  Attribution is best-effort: its own failure must never
+    mask the gate verdict."""
+    try:
+        from repro.tools import perfdiff
+        rep = perfdiff.diff_bench(
+            json.loads(baseline.read_text()),
+            json.loads(current.read_text()),
+            threshold=threshold, min_us=min_us,
+            baseline=str(baseline), current=str(current))
+        text = perfdiff.render(rep)
+        print("\n" + text)
+        report_dir.mkdir(parents=True, exist_ok=True)
+        (report_dir / "perfdiff_report.txt").write_text(text + "\n")
+        (report_dir / "perfdiff_report.json").write_text(
+            json.dumps(rep, indent=1))
+        print(f"\nperf gate: attribution report written to "
+              f"{report_dir}/perfdiff_report.{{txt,json}}")
+    except Exception as e:      # noqa: BLE001
+        print(f"perf gate: attribution failed ({e}); the verdict above "
+              f"stands")
+
+
 def check(baseline: pathlib.Path, current: pathlib.Path,
-          threshold: float = 1.25, min_us: float = 20.0) -> int:
+          threshold: float = 1.25, min_us: float = 20.0,
+          report_dir: pathlib.Path | None = None) -> int:
     base = _rows(baseline)
     cur = _rows(current)
+    _fingerprint_warning(baseline, current)
     compared = regressed = 0
     print(f"perf gate: {current} vs baseline {baseline} "
           f"(fail > x{threshold:.2f})")
@@ -75,6 +144,9 @@ def check(baseline: pathlib.Path, current: pathlib.Path,
     if regressed:
         print(f"perf gate: {regressed}/{compared} pinned points regressed "
               f"beyond x{threshold:.2f}")
+        _emit_attribution(baseline, current, threshold, min_us,
+                          report_dir if report_dir is not None
+                          else pathlib.Path("bench-reports"))
         return 1
     print(f"perf gate: {compared} pinned points within x{threshold:.2f}")
     return 0
@@ -90,9 +162,13 @@ def main(argv=None) -> None:
                     help="fail when current > threshold * baseline")
     ap.add_argument("--min-us", type=float, default=20.0,
                     help="skip rows whose baseline is below this (noise)")
+    ap.add_argument("--report-dir", default="bench-reports",
+                    help="where the perfdiff attribution artifact lands "
+                         "on failure")
     args = ap.parse_args(argv)
     rc = check(pathlib.Path(args.baseline), pathlib.Path(args.current),
-               args.threshold, args.min_us)
+               args.threshold, args.min_us,
+               pathlib.Path(args.report_dir))
     sys.exit(rc)
 
 

@@ -1,0 +1,316 @@
+"""Paper-fidelity acceptance gate (DESIGN.md §18).
+
+The paper's contribution is an *evaluation* — latency/bandwidth curves
+for put/get, barrier, broadcast, and reductions on the 16-PE Epiphany
+mesh (arXiv:1608.03545 §5, earlier numbers in arXiv:1604.04205).  This
+module is its declarative digitization: one :class:`FidelityRow` per
+gated paper number (value, source figure, tolerance, comparison mode)
+checked against what OUR alpha-beta/congestion model derives for the
+same experiment.  The derivations run the exact code the selectors run
+(``abmodel`` eq. 1 on the paper's NoC constants, the interned
+``collectives`` schedules priced per stage), so any drive-by edit to a
+``LinkModel`` constant, a schedule builder, or the ISR-entry cost moves
+a derived value and trips the gate — speed claims stay *checked* facts,
+not free-text ``paper=`` strings.
+
+``paper_benches.py`` sources its paper comparisons from this table
+(:func:`ref`) and re-emits every gated row via :func:`bench_rows`; CI
+runs the check next to ``check_regression.py``:
+
+  PYTHONPATH=src python -m benchmarks.paper_fidelity --check
+  PYTHONPATH=src python -m benchmarks.paper_fidelity --check \\
+      --perturb bw_Bps=1.2e9        # demo: exit 1 on a skewed constant
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Callable
+
+sys.path.insert(0, "src")
+
+from repro.core import abmodel, collectives as coll  # noqa: E402
+from repro.configs import epiphany16 as paper        # noqa: E402
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelityModel:
+    """Everything the derivations depend on — one knob object so tests
+    (and ``--perturb``) can skew a constant and watch the gate trip."""
+
+    link: abmodel.LinkModel = paper.PUT_LINK
+    get_link: abmodel.LinkModel = paper.GET_LINK
+    topo: object = paper.TOPOLOGY
+    n: int = paper.N_PES
+    isr_entry_s: float = paper.ISR_ENTRY_S
+    sizes: tuple = tuple(paper.MSG_SIZES)
+    reduce_work_bytes: int = 256    # SHMEM_REDUCE_MIN_WRKDATA_SIZE * 4
+
+
+# -- derivations (each: FidelityModel -> scalar) ----------------------------
+
+def _fits(m: FidelityModel) -> tuple[abmodel.ABFit, abmodel.ABFit]:
+    put = [abmodel.stage_time(s, 1.0, m.link) for s in m.sizes]
+    get = [abmodel.stage_time(s, 1.0, m.get_link) for s in m.sizes]
+    return abmodel.fit(m.sizes, put), abmodel.fit(m.sizes, get)
+
+
+def ipi_get_turnover(m: FidelityModel) -> float:
+    """Smallest swept size where the IPI-get protocol (8 B interrupt
+    signal + ISR entry + owner-executed put) beats the direct
+    read-request get — the paper's 64 B crossover.  Shared with
+    ``paper_benches.bench_rma`` so the bench and the gate cannot
+    diverge."""
+    for s in m.sizes:
+        direct = abmodel.stage_time(s, 1.0, m.get_link)
+        ipi = (abmodel.stage_time(8, 1.0, m.link)
+               + abmodel.stage_time(s, 1.0, m.link) + m.isr_entry_s)
+        if ipi < direct:
+            return float(s)
+    return float("inf")
+
+
+def _d_put_alpha_us(m):
+    return _fits(m)[0].alpha * 1e6
+
+
+def _d_put_peak(m):
+    return _fits(m)[0].inv_beta / 1e9
+
+
+def _d_get_peak(m):
+    return _fits(m)[1].inv_beta / 1e9
+
+
+def _d_ratio(m):
+    fp, fg = _fits(m)
+    return fg.inv_beta / fp.inv_beta
+
+
+def _d_put_4096(m):
+    return abmodel.stage_time(4096, 1.0, m.link) * 1e6
+
+
+def _d_get_4096(m):
+    return abmodel.stage_time(4096, 1.0, m.get_link) * 1e6
+
+
+def _d_dissem_us(m):
+    return abmodel.modeled_collective_time(
+        coll.barrier_stages(m.n, m.topo), m.link) * 1e6
+
+
+def _d_elib_over_dissem(m):
+    return paper.PAPER["elib_barrier_us"] / _d_dissem_us(m)
+
+
+def _d_dissem_over_wand(m):
+    return _d_dissem_us(m) / paper.PAPER["wand_barrier_us"]
+
+
+def _d_bcast_eff(m):
+    t = abmodel.modeled_collective_time(
+        coll.broadcast_stages(m.n, 8192, m.topo), m.link)
+    return 8192 / t / 1e9
+
+
+def _d_reduce_knee(m):
+    """Largest size whose work-array-padded allreduce time still equals
+    the smallest message's — where the latency floor ends and the curve
+    starts rising (paper Fig. 8)."""
+    floor = float(m.reduce_work_bytes)
+    t = {s: abmodel.modeled_collective_time(
+        coll.allreduce_stages(m.n, max(s, floor), m.topo), m.link)
+        for s in m.sizes}
+    base, knee = t[m.sizes[0]], m.sizes[0]
+    for s in m.sizes:
+        if t[s] <= base * (1 + 1e-9):
+            knee = s
+    return float(knee)
+
+
+# -- the gated table ---------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FidelityRow:
+    key: str
+    paper_value: float
+    units: str
+    mode: str                    # "rel" | "max" | "min"
+    tol: float                   # rel: |err|<=tol; max: d<=p*(1+tol);
+    source: str                  # min: d>=p*(1-tol)
+    derive: Callable[[FidelityModel], float]
+    note: str = ""
+
+
+_P = paper.PAPER
+
+#: Every gated paper number.  ``mode="rel"`` rows are two-sided fidelity
+#: checks; ``max``/``min`` rows are one-sided bounds used where the model
+#: has a DOCUMENTED structural deviation (see each row's note).
+TABLE: tuple[FidelityRow, ...] = (
+    FidelityRow("put_alpha_us", _P["put_alpha_us"], "us", "rel", 0.10,
+                "1608.03545_Fig.3+1604.04205_Fig.4", _d_put_alpha_us,
+                "small-message latency intercept of the put fit"),
+    FidelityRow("put_peak_GBs", _P["put_peak_GBs"], "GB/s", "rel", 0.02,
+                "1608.03545_Fig.3", _d_put_peak,
+                "8B/clk eMesh write channel at 600 MHz, DMA-throttled"),
+    FidelityRow("get_peak_GBs", _P["get_peak_GBs"], "GB/s", "rel", 0.02,
+                "1608.03545_Fig.3", _d_get_peak,
+                "round-trip read-request channel"),
+    FidelityRow("get_put_ratio", _P["get_put_ratio"], "", "rel", 0.02,
+                "1608.03545_Fig.3", _d_ratio,
+                "get saturates ~10x below put"),
+    FidelityRow("put_4096B_us", _P["put_4096B_us"], "us", "rel", 0.05,
+                "1608.03545_Fig.3", _d_put_4096,
+                "digitized 4 KB put latency point"),
+    FidelityRow("get_4096B_us", _P["get_4096B_us"], "us", "rel", 0.05,
+                "1608.03545_Fig.3", _d_get_4096,
+                "digitized 4 KB get latency point"),
+    FidelityRow("ipi_get_turnover_B", _P["ipi_get_turnover_B"], "B",
+                "rel", 0.0, "1608.03545_Fig.3", ipi_get_turnover,
+                "exact after the ISR-entry fix (60 clk not 120; the seed "
+                "derived 128 B)"),
+    FidelityRow("dissem_barrier_us_16pe", _P["dissem_barrier_us_16pe"],
+                "us", "max", 1.2, "1608.03545_Fig.6+§5",
+                _d_dissem_us,
+                "documented deviation: the model prices each barrier "
+                "flag put at the full DMA-descriptor launch alpha where "
+                "the chip's flag is a bare word store — modeled ~2.1x "
+                "the measured 0.23 us, bounded at 2.2x"),
+    FidelityRow("barrier_beats_elib_x", _P["elib_barrier_us"]
+                / _P["dissem_barrier_us_16pe"], "x", "min", 0.55,
+                "1608.03545_§5", _d_elib_over_dissem,
+                "dissemination barrier must stay >=3.9x faster than the "
+                "2.0 us e-lib barrier (paper: 8.7x; the flag-put alpha "
+                "deviation halves the modeled margin)"),
+    FidelityRow("wand_vs_dissem_x", _P["dissem_barrier_us_16pe"]
+                / _P["wand_barrier_us"], "x", "max", 1.2,
+                "1608.03545_§5", _d_dissem_over_wand,
+                "hardware WAND barrier stays ahead but by a bounded "
+                "factor (paper: 2.3x; modeled <=5.06x under the same "
+                "flag-put alpha deviation)"),
+    FidelityRow("bcast_eff_GBs_8192B", _P["bcast_GBs_over_log2N"] / 4.0,
+                "GB/s", "rel", 0.10, "1608.03545_Fig.6", _d_bcast_eff,
+                "~2.4/log2(16) GB/s at 8 KB"),
+    FidelityRow("reduce_knee_B", _P["reduce_knee_B"], "B", "rel", 0.0,
+                "1608.03545_Fig.8", _d_reduce_knee,
+                "SHMEM_REDUCE_MIN_WRKDATA_SIZE (64 ints) latency floor"),
+)
+
+_ROW_BY_KEY = {r.key: r for r in TABLE}
+
+
+@dataclasses.dataclass
+class FidelityResult:
+    row: FidelityRow
+    derived: float
+    err: float                   # signed relative deviation from paper
+    ok: bool
+
+
+def evaluate(model: FidelityModel | None = None) -> list[FidelityResult]:
+    m = model if model is not None else FidelityModel()
+    out = []
+    for r in TABLE:
+        d = float(r.derive(m))
+        err = (d - r.paper_value) / abs(r.paper_value)
+        if r.mode == "rel":
+            ok = abs(err) <= r.tol + 1e-12
+        elif r.mode == "max":
+            ok = d <= r.paper_value * (1 + r.tol) + 1e-12
+        elif r.mode == "min":
+            ok = d >= r.paper_value * (1 - r.tol) - 1e-12
+        else:
+            raise ValueError(f"bad mode {r.mode!r}")
+        out.append(FidelityResult(r, d, err, ok))
+    return out
+
+
+def check(model: FidelityModel | None = None, out=None) -> int:
+    """Print the acceptance table; 0 when every row holds, 1 otherwise."""
+    out = out if out is not None else sys.stdout
+    results = evaluate(model)
+    print(f"paper-fidelity gate: {len(results)} rows "
+          f"(model-derived vs digitized paper values)", file=out)
+    print(f"{'key':<26s} {'mode':<4s} {'paper':>10s} {'derived':>10s} "
+          f"{'err':>8s} {'tol':>6s} {'verdict':<9s} source", file=out)
+    bad = 0
+    for res in results:
+        r = res.row
+        verdict = "OK" if res.ok else "VIOLATION"
+        bad += not res.ok
+        print(f"{r.key:<26s} {r.mode:<4s} {r.paper_value:>10.4g} "
+              f"{res.derived:>10.4g} {res.err:>+8.1%} {r.tol:>6.2f} "
+              f"{verdict:<9s} {r.source}", file=out)
+    if bad:
+        print(f"paper-fidelity gate: {bad}/{len(results)} rows violated",
+              file=out)
+        return 1
+    print(f"paper-fidelity gate: all {len(results)} rows within tolerance",
+          file=out)
+    return 0
+
+
+# -- hooks for paper_benches -------------------------------------------------
+
+def ref(key: str) -> str:
+    """The derived-column citation string for a gated number — what
+    ``paper_benches`` prints instead of a free-text ``paper=``."""
+    r = _ROW_BY_KEY[key]
+    return f"paper={r.paper_value:g}{r.units}[{r.source}]"
+
+
+def bench_rows(model: FidelityModel | None = None) -> list[tuple]:
+    """Every gated row as a standardized bench (name, value, derived)
+    triple — ``paper_benches.bench_fidelity`` re-emits these so the
+    fidelity trajectory lands in BENCH_*.json alongside wall times."""
+    out = []
+    for res in evaluate(model):
+        r = res.row
+        out.append((f"fidelity_{r.key}", res.derived,
+                    f"paper={r.paper_value:g}{r.units} mode={r.mode} "
+                    f"tol={r.tol:g} err={res.err:+.1%} "
+                    f"src={r.source} "
+                    f"{'OK' if res.ok else 'VIOLATION'}"))
+    return out
+
+
+def _perturbed(specs: list[str]) -> FidelityModel:
+    """``--perturb [get:]field=value`` -> a FidelityModel with that
+    LinkModel constant replaced (put link by default)."""
+    m = FidelityModel()
+    for spec in specs:
+        target, _, rest = spec.partition(":") if ":" in spec \
+            else ("put", "", spec)
+        field, _, val = rest.partition("=")
+        if not val:
+            raise SystemExit(f"--perturb wants [get:]field=value, got "
+                             f"{spec!r}")
+        attr = "get_link" if target == "get" else "link"
+        link = dataclasses.replace(getattr(m, attr),
+                                   **{field: float(val)})
+        m = dataclasses.replace(m, **{attr: link})
+    return m
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when any gated row is out of tolerance "
+                         "(the CI acceptance gate)")
+    ap.add_argument("--perturb", action="append", default=[],
+                    metavar="[get:]FIELD=VALUE",
+                    help="skew a LinkModel constant before deriving "
+                         "(e.g. bw_Bps=1.2e9) — demonstrates the gate "
+                         "tripping on a drive-by constant change")
+    args = ap.parse_args(argv)
+    model = _perturbed(args.perturb) if args.perturb else None
+    rc = check(model)
+    if args.check and rc:
+        sys.exit(rc)
+
+
+if __name__ == "__main__":
+    main()

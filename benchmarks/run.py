@@ -1,13 +1,16 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (paper Figs. 3-9 + kernel layer),
-then the schedule/congestion/substrate/tuner reports and the roofline
-table if dry-run/probe artifacts exist.
+Prints ``name,us_per_call,derived`` CSV (paper Figs. 3-9 + the fidelity
+acceptance rows + kernel layer), then the schedule/congestion/substrate/
+tuner/fused/serve/trace/fault reports and the revived roofline bench
+(profiled steps on compute/memory/NoC rooflines — no artifacts needed).
 
 ``--json OUT`` additionally writes every bench's rows as one
 machine-readable ``BENCH_*.json`` document (standardized
 size/measured/predicted/picked fields parsed from each row — the CI
-perf-trajectory artifact); ``--only a,b`` restricts which benches run.
+perf-trajectory artifact) stamped with this machine's fingerprint, so
+``check_regression.py`` can warn on cross-machine comparisons;
+``--only a,b`` restricts which benches run.
 
   PYTHONPATH=src python -m benchmarks.run
   PYTHONPATH=src python -m benchmarks.run --only patterns,tuner \\
@@ -15,8 +18,11 @@ perf-trajectory artifact); ``--only a,b`` restricts which benches run.
 """
 import argparse
 import json
+import os
 import pathlib
+import platform
 import re
+import socket
 import sys
 import time
 
@@ -47,6 +53,28 @@ def _std_row(bench: str, name: str, us, derived: str) -> dict:
         "predicted_us": float(pred.group(1)) if pred else None,
         "picked": pick.group(1) if pick else None,
     }
+
+
+def machine_fingerprint() -> dict:
+    """Hostname/CPU/jax-stack identity stamped into every BENCH_*.json
+    header — wall times are only comparable within one fingerprint
+    (check_regression warns loudly when they differ)."""
+    fp = {
+        "hostname": socket.gethostname(),
+        "cpus": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        import jaxlib
+        fp["jax"] = jax.__version__
+        fp["jaxlib"] = jaxlib.__version__
+        fp["xla_backend"] = jax.default_backend()
+        fp["device_count"] = jax.device_count()
+    except Exception:
+        fp["jax"] = None
+    return fp
 
 
 def _run_paper():
@@ -94,6 +122,10 @@ BENCHES = [
     ("fault", False, _module_runner(
         "bench_fault",
         "fault tolerance: async-ckpt overlap overhead + recovery time")),
+    ("roofline", False, _module_runner(
+        "roofline",
+        "roofline: profiled train/decode steps vs compute/memory/NoC "
+        "ceilings")),
 ]
 
 
@@ -105,11 +137,11 @@ def main(argv=None) -> None:
                          "picked fields)")
     ap.add_argument("--only", default="",
                     help="comma-separated bench keys to run "
-                         f"({','.join(k for k, _, _ in BENCHES)},"
-                         "roofline); default: all")
+                         f"({','.join(k for k, _, _ in BENCHES)}); "
+                         "default: all")
     args = ap.parse_args(argv)
     only = {k.strip() for k in args.only.split(",") if k.strip()}
-    unknown = only - {k for k, _, _ in BENCHES} - {"roofline"}
+    unknown = only - {k for k, _, _ in BENCHES}
     if unknown:
         raise SystemExit(f"unknown bench keys: {sorted(unknown)}")
 
@@ -127,18 +159,12 @@ def main(argv=None) -> None:
         for name, us, derived in getattr(mod, "ROWS", []):
             rows.append(_std_row(key, name, us, str(derived)))
 
-    if not only or "roofline" in only:
-        probe_dir = pathlib.Path("experiments/roofline")
-        if probe_dir.exists() and any(probe_dir.glob("*.json")):
-            print("\n== roofline (from dry-run probes) ==")
-            from . import roofline
-            roofline.render_table()
-
     if args.json:
         out = pathlib.Path(args.json)
         out.parent.mkdir(parents=True, exist_ok=True)
         doc = {"schema": 1,
                "generated_unix": time.time(),
+               "machine": machine_fingerprint(),
                "benches": sorted({r["bench"] for r in rows}),
                "rows": rows}
         out.write_text(json.dumps(doc, indent=1))

@@ -79,6 +79,9 @@ class OpSample:
     issue_s: float = 0.0           # "sync" kind: time spent issuing
     stall_s: float = 0.0           # "sync" kind: time stalled on pending ops
     meta: dict | None = None       # free-form span annotations (trace args)
+    stage_costs: list | None = None  # per-stage cost-model attribution:
+    #                                  [{nbytes, hops, load, predicted_s}]
+    #                                  (perfdiff/tracereport read these)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -236,6 +239,22 @@ class Profiler:
                      for st in schedule.stages), default=0.0)
             except Exception:
                 s.max_link_load = 0.0
+            try:
+                # per-stage attribution: the exact (bytes, hops, load)
+                # descriptors eq. 1 prices, plus the per-stage modeled
+                # time when a link model is known — what perfdiff
+                # decomposes regressions against and the tracer stamps
+                # onto stage spans (DESIGN.md §18)
+                s.stage_costs = []
+                for st in schedule.stages:
+                    nb, hops, load = st.cost(topo)
+                    c = {"nbytes": float(nb), "hops": float(hops),
+                         "load": float(load)}
+                    if link is not None:
+                        c["predicted_s"] = link.time(nb, hops, load)
+                    s.stage_costs.append(c)
+            except Exception:
+                s.stage_costs = None
             if link is not None:
                 s.predicted_s = schedule.pipelined_time(
                     max(s.chunks, 1), topo, link)

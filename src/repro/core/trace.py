@@ -77,6 +77,10 @@ class Tracer(Profiler):
         self._n_pes_seen = 1
         # per-topology accumulated link bytes: {topo: {(u, v): bytes}}
         self._link_bytes: dict = {}
+        # extra JSON sections merged into the document's ``repro``
+        # metadata (e.g. the roofline summary benchmarks/roofline.py
+        # embeds for ``tracereport``); reserved keys are ignored
+        self.sections: dict = {}
 
     # -- low-level event plumbing --------------------------------------------
     def _now_us(self) -> float:
@@ -233,12 +237,22 @@ class Tracer(Profiler):
         cap = self.flows_per_op
         t = ts
         seen_pe = self._n_pes_seen
+        costs = s.stage_costs or []
         for k, st in enumerate(stages):
             d = dur * weights[k] / total
             pes = sorted({p for pair in st.pattern.pairs for p in pair})
             if pes:
                 seen_pe = max(seen_pe, pes[-1] + 1)
             args = {"nbytes": st.nbytes, "stage": k}
+            if k < len(costs) and isinstance(costs[k], dict):
+                # stamp the per-stage cost-model attribution onto the
+                # span so a viewer (or tracereport --diff) can compare
+                # wall vs modeled stage time directly
+                args["hops"] = costs[k].get("hops", 0.0)
+                args["link_load"] = costs[k].get("load", 0.0)
+                pred = costs[k].get("predicted_s")
+                if pred is not None:
+                    args["predicted_us"] = pred * 1e6
             if s.traced:
                 args["traced"] = True
             for pe in pes:
@@ -303,17 +317,20 @@ class Tracer(Profiler):
                          "tid": pe, "args": {"name": f"PE {pe}"}})
         with self._lock:
             events = list(self._events)
+        rep = {
+            "schema": 1,
+            "level": self.level,
+            "events_dropped": self.events_dropped,
+            "sink_errors": self.sink_errors,
+            "counters": self.counters(),
+            "heatmap": self.heatmap(),
+        }
+        for k, v in self.sections.items():
+            rep.setdefault(k, v)        # user sections never shadow core
         return {
             "traceEvents": meta + events,
             "displayTimeUnit": "ms",
-            "repro": {
-                "schema": 1,
-                "level": self.level,
-                "events_dropped": self.events_dropped,
-                "sink_errors": self.sink_errors,
-                "counters": self.counters(),
-                "heatmap": self.heatmap(),
-            },
+            "repro": rep,
         }
 
     def dump_chrome(self, path) -> None:

@@ -6,10 +6,15 @@ fractions, the hottest NoC links as an ASCII heatmap, and (with
 
 ``--check`` validates both documents against the expected schema
 (hand-rolled structural checks, no external jsonschema dependency) and
-exits non-zero on violations — the CI artifact gate.
+exits non-zero on violations — the CI artifact gate.  ``--diff OTHER``
+prints the per-span/per-stage wall deltas and hottest-link shifts
+against a second trace (``repro.tools.perfdiff``); a trace whose
+``repro`` section embeds a ``roofline`` summary (benchmarks/roofline.py)
+gets an MFU/bottleneck section.
 
   PYTHONPATH=src python -m repro.tools.tracereport trace.json \\
       --metrics metrics.json --check
+  PYTHONPATH=src python -m repro.tools.tracereport new.json --diff old.json
 """
 from __future__ import annotations
 
@@ -217,6 +222,22 @@ def report(trace_path: pathlib.Path, metrics_path: pathlib.Path | None,
         print("\nchaos summary (fault layer, DESIGN.md §17):")
         print("\n".join(chaos))
 
+    rl = rep.get("roofline")
+    if isinstance(rl, dict) and rl.get("cells"):
+        pk = rl.get("peaks", {})
+        print(f"\nroofline summary (machine {rl.get('machine', '?')}, "
+              f"peak {pk.get('flops', 0) / 1e9:.1f} GFLOP/s, "
+              f"{pk.get('mem_Bps', 0) / 1e9:.1f} GB/s mem, "
+              f"NoC {pk.get('link_GBs', 0):.2f} GB/s):")
+        print(f"  {'cell':<26s} {'wall':>10s} {'compute':>10s} "
+              f"{'memory':>10s} {'noc':>10s} {'bottleneck':>10s} "
+              f"{'MFU':>7s}")
+        for c in rl["cells"]:
+            print(f"  {c['cell']:<26s} {c['wall_us']:>8.1f}us "
+                  f"{c['compute_us']:>8.1f}us {c['memory_us']:>8.1f}us "
+                  f"{c['noc_us']:>8.1f}us {c['bottleneck']:>10s} "
+                  f"{min(c.get('mfu', 0.0), 9.999):>7.3f}")
+
     for hm in rep.get("heatmap", []):
         shape = "x".join(map(str, hm["shape"]))
         print(f"\nNoC heatmap ({shape} mesh, {hm['n_links']} links, "
@@ -254,9 +275,22 @@ def main(argv=None) -> None:
     ap.add_argument("--check", action="store_true",
                     help="validate document schemas and exit non-zero on "
                          "violations (the CI artifact gate)")
+    ap.add_argument("--diff", default="",
+                    help="second trace to diff against: per-span/"
+                         "per-stage wall deltas + hottest-link shifts "
+                         "(repro.tools.perfdiff)")
     args = ap.parse_args(argv)
     tpath = pathlib.Path(args.trace)
     mpath = pathlib.Path(args.metrics) if args.metrics else None
+
+    if args.diff:
+        from . import perfdiff
+        rep = perfdiff.diff_traces(
+            json.loads(pathlib.Path(args.diff).read_text()),
+            json.loads(tpath.read_text()), top=args.top,
+            baseline=args.diff, current=str(tpath))
+        print(perfdiff.render(rep))
+        return
 
     if args.check:
         errs = validate_trace(json.loads(tpath.read_text()))

@@ -1,0 +1,93 @@
+"""run.py's standardized-row extractors (_std_row and its regexes)
+against REAL derived strings from every registered bench — the fields
+check_regression pins and perfdiff fits come from these parses, so a
+regex drift here silently un-gates CI."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import run  # noqa: E402
+
+# (bench, name, derived, size_bytes, predicted_us, picked) — sampled
+# verbatim from a committed BENCH_*.json, one or more per bench.
+REPRESENTATIVE = [
+    ("paper", "shmem_put_4096B_sim", "model=1.809us",
+     4096, None, None),
+    ("paper", "put_alpha_us", "beta^-1=2.40GB/s paper=2.4GB/s",
+     None, None, None),
+    ("paper", "fidelity_put_peak_GBs",
+     "paper=2.4GB/s[1608.03545 Fig.4] mode=rel tol=0.02 err=+0.0% "
+     "src=1608.03545 Fig.4 OK", None, None, None),
+    ("patterns", "allreduce_rd_256B",
+     "fit=8.39us(x1.84) noc=1.695us stages=4", 256, 8.39, None),
+    ("patterns", "sim_stage_alpha_us", "beta^-1=0.29GB/s (+-10.67us)",
+     None, None, None),
+    ("congestion", "allreduce_ring_65536B",
+     "emb=502.56us speedup=x3.53 pred=x1.95 auto_pick=ring_emb/c16",
+     65536, None, "ring_emb/c16"),
+    ("congestion", "contention_gamma",
+     "gamma=1.00 (1.0=full serialization)", None, None, None),
+    ("tuner", "tuned_allreduce_4096B",
+     "picked=rd/c1 analytic=ring/c8(773.98us) variants=7",
+     4096, None, "rd/c1"),
+    ("fused", "attn_ring_65536B_us",
+     "L=256 x1.14vs-mono pred=1139.56us pick=ring",
+     65536, 1139.56, "ring"),
+    ("serve", "serve_decode_p50_us_occ1", "steps=23 page=8tok kv=5120B",
+     None, None, None),
+    ("trace", "trace_allreduce_65536B_off", "vs_base=-7.8% level=0",
+     65536, None, None),
+    ("fault", "ckpt_sync_save_16777216B", "324MB/s inline stall",
+     16777216, None, None),
+    ("roofline", "roofline_train_wall_us",
+     "pred=1599.81us pick=compute mfu=1.161 noc=ring/c16 link=default",
+     None, 1599.81, "compute"),
+    ("roofline", "roofline_decode_noc_us",
+     "payload=18432B compute=0.86us memory=0.45us", None, None, None),
+]
+
+
+@pytest.mark.parametrize(
+    "bench,name,derived,size,pred,pick", REPRESENTATIVE,
+    ids=[f"{b}:{n}" for b, n, *_ in REPRESENTATIVE])
+def test_std_row_extracts_fields(bench, name, derived, size, pred, pick):
+    r = run._std_row(bench, name, 12.5, derived)
+    assert r["bench"] == bench and r["name"] == name
+    assert r["measured_us"] == 12.5
+    assert r["size_bytes"] == size
+    assert r["predicted_us"] == pred
+    assert r["picked"] == pick
+
+
+def test_every_registered_bench_has_a_representative_row():
+    keys = {k for k, _, _ in run.BENCHES}
+    covered = {b for b, *_ in REPRESENTATIVE}
+    # substrate is the one bench that exports no ROWS (subprocess A/B,
+    # prints only); everything else must be exercised above
+    assert keys - covered == {"substrate"}
+    assert covered - keys == set()
+
+
+def test_size_regex_wants_trailing_boundary():
+    # `_65536B_off` and `_64B` match; an interior `B` in a word must not
+    assert run._SIZE_RE.search("trace_allreduce_65536B_off").group(1) \
+        == "65536"
+    assert run._SIZE_RE.search("shmem_put_64B").group(1) == "64"
+    assert run._SIZE_RE.search("serve_tok_per_s_occ1") is None
+
+
+def test_pred_regex_ignores_ratio_predictions():
+    # congestion's `pred=x1.95` is a speedup ratio, not microseconds
+    assert run._PRED_RE.search("speedup=x3.53 pred=x1.95") is None
+    assert run._PRED_RE.search("fit=8.39us(x1.48)").group(1) == "8.39"
+    assert run._PRED_RE.search("noc=0.842us").group(1) == "0.842"
+
+
+def test_machine_fingerprint_identity_fields():
+    fp = run.machine_fingerprint()
+    for key in ("hostname", "cpus", "platform", "python", "jax"):
+        assert key in fp
+    assert isinstance(fp["cpus"], int) and fp["cpus"] > 0

@@ -1,0 +1,142 @@
+"""Regression attribution (DESIGN.md §18): perfdiff decomposes an
+injected regression into the cost-model term that caused it — an
+algorithm-pick change vs an alpha/beta shift vs a contention-gamma
+shift — and check_regression ships the report on a gate failure."""
+import copy
+import json
+import os
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import check_regression  # noqa: E402
+from repro.tools import perfdiff  # noqa: E402
+
+BENCH9 = pathlib.Path(__file__).resolve().parents[1] / "BENCH_9.json"
+
+
+@pytest.fixture(scope="module")
+def base_doc():
+    return json.loads(BENCH9.read_text())
+
+
+def test_pick_change_attribution(base_doc):
+    cur = copy.deepcopy(base_doc)
+    for r in cur["rows"]:
+        if (r["bench"], r["name"]) == ("congestion",
+                                       "allreduce_ring_65536B"):
+            r["measured_us"] *= 2.0
+            r["picked"] = "ring/c1"
+    rep = perfdiff.diff_bench(base_doc, cur)
+    regs = {(e["bench"], e["name"]): e for e in rep["regressions"]}
+    e = regs[("congestion", "allreduce_ring_65536B")]
+    assert e["attribution"] == "pick"
+    assert e["terms"]["pick"] == {"base": "ring_emb/c16",
+                                  "cur": "ring/c1"}
+
+
+def test_beta_shift_attribution(base_doc):
+    # scale one size-swept family proportional to payload: the refit
+    # beta moves, alpha stays — per-byte cost, not per-op overhead
+    cur = copy.deepcopy(base_doc)
+    for r in cur["rows"]:
+        if r["bench"] == "patterns" \
+                and r["name"].startswith("allreduce_rd_") \
+                and r.get("size_bytes"):
+            r["measured_us"] *= 1.0 + r["size_bytes"] / 65536
+    rep = perfdiff.diff_bench(base_doc, cur)
+    regs = {(e["bench"], e["name"]): e for e in rep["regressions"]}
+    e = regs[("patterns", "allreduce_rd_65536B")]
+    assert e["attribution"] == "beta"
+    assert e["terms"]["beta_us"] > abs(e["terms"]["alpha_us"])
+
+
+def test_contention_shift_attribution(base_doc):
+    # baseline ran at gamma=0.40 with proportionally cheaper contended
+    # stages; the current run serializes fully (gamma=1.00, BENCH_9)
+    base = copy.deepcopy(base_doc)
+    for r in base["rows"]:
+        if (r["bench"], r["name"]) == ("congestion", "contention_gamma"):
+            r["derived"] = "gamma=0.40 (1.0=full serialization)"
+        if r["bench"] == "congestion" \
+                and r["name"].startswith("noc_stage_ring_offset"):
+            r["measured_us"] *= 0.4
+    rep = perfdiff.diff_bench(base, base_doc)
+    assert rep["gamma_base"] == pytest.approx(0.40)
+    assert rep["gamma_cur"] == pytest.approx(1.00)
+    regs = {(e["bench"], e["name"]): e for e in rep["regressions"]}
+    e = regs[("congestion", "noc_stage_ring_offset8")]
+    assert e["attribution"] == "contention"
+
+
+def test_no_regressions_on_identical_docs(base_doc):
+    rep = perfdiff.diff_bench(base_doc, base_doc)
+    assert rep["regressions"] == []
+    assert rep["n_rows_compared"] > 0
+    assert "perfdiff" in perfdiff.render(rep)
+
+
+def test_trace_diff_reports_span_and_link_shifts():
+    def trace(dur, link_bytes):
+        return {"traceEvents": [
+            {"name": "allreduce[ring]", "ph": "X", "ts": 0.0,
+             "dur": dur, "pid": 1, "tid": 0, "cat": "collective"},
+            {"name": "allreduce.ring.s0", "ph": "X", "ts": 0.0,
+             "dur": dur / 2, "pid": 0, "tid": 0, "cat": "stage"},
+        ], "repro": {"schema": 1, "heatmap": [
+            {"shape": [4, 4], "n_links": 1, "links": [
+                {"a": 0, "b": 1, "bytes": link_bytes,
+                 "coord_a": [0, 0], "coord_b": [0, 1]}]}]}}
+
+    rep = perfdiff.diff_traces(trace(100.0, 1e6), trace(250.0, 4e6))
+    assert rep["kind"] == "trace"
+    spans = {d["name"]: d for d in rep["spans"]}
+    assert spans["allreduce[ring]"]["delta_us"] == pytest.approx(150.0)
+    stages = {d["name"]: d for d in rep["stages"]}
+    assert stages["allreduce.ring.s0"]["delta_us"] == pytest.approx(75.0)
+    assert rep["hot_links"][0]["cur_bytes"] == pytest.approx(4e6)
+    assert "hottest-link" in perfdiff.render(rep)
+
+
+def test_check_regression_emits_attribution_report(base_doc, tmp_path,
+                                                   capsys):
+    cur = copy.deepcopy(base_doc)
+    for r in cur["rows"]:
+        if r["bench"] == "patterns" \
+                and r["name"].startswith("allreduce_rd_") \
+                and r.get("size_bytes"):
+            r["measured_us"] *= 1.0 + r["size_bytes"] / 65536
+    cur_path = tmp_path / "BENCH_cur.json"
+    cur_path.write_text(json.dumps(cur))
+    rc = check_regression.check(BENCH9, cur_path,
+                                report_dir=tmp_path / "reports")
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REGRESSED" in out
+    assert "attribution: BETA" in out
+    rep = json.loads((tmp_path / "reports" /
+                      "perfdiff_report.json").read_text())
+    assert rep["regressions"][0]["attribution"] == "beta"
+    assert (tmp_path / "reports" / "perfdiff_report.txt").exists()
+
+
+def test_fingerprint_mismatch_warns(base_doc, tmp_path, capsys):
+    a = copy.deepcopy(base_doc)
+    b = copy.deepcopy(base_doc)
+    a["machine"] = {"hostname": "runner-a", "cpus": 4}
+    b["machine"] = {"hostname": "runner-b", "cpus": 64}
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    pa.write_text(json.dumps(a))
+    pb.write_text(json.dumps(b))
+    rc = check_regression.check(pa, pb, report_dir=tmp_path)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "DIFFERENT machines" in out
+    assert "hostname" in out
+    # identical fingerprints: no banner
+    pb.write_text(json.dumps(a))
+    check_regression.check(pa, pb, report_dir=tmp_path)
+    assert "DIFFERENT machines" not in capsys.readouterr().out
